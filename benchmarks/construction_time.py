@@ -1,0 +1,55 @@
+"""Paper Tables 4 & 7: index construction time per method per dataset."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    HL_LARGE_OK,
+    LARGE_DATASETS,
+    LARGE_SCALE,
+    METHODS,
+    SMALL_DATASETS,
+    csv_row,
+    load_dataset,
+    time_once,
+)
+
+
+def run(small_methods=None, large_methods=None, *, out=print):
+    out("# table4_construction_small (paper Table 4)")
+    out("name,us_per_call,derived")
+    for ds in SMALL_DATASETS:
+        g = load_dataset(ds, scale=1.0)
+        for name, (builder, _) in METHODS.items():
+            if name == "BFS":
+                continue
+            if small_methods and name not in small_methods:
+                continue
+            try:
+                dt, idx = time_once(lambda b=builder: b(g))
+                out(csv_row(f"build/{ds}/{name}", dt * 1e6,
+                            f"n={g.n};m={g.m};size_ints={idx.index_size_ints}"))
+            except MemoryError:
+                out(csv_row(f"build/{ds}/{name}", float("nan"), "OOM"))
+
+    out("# table7_construction_large (paper Table 7; scaled analogues)")
+    out("name,us_per_call,derived")
+    for ds in LARGE_DATASETS:
+        scale = LARGE_SCALE[ds]
+        g = load_dataset(ds, scale=scale)
+        for name in ("GRAIL", "INTERVAL", "HL", "DL"):
+            if large_methods and name not in large_methods:
+                continue
+            if name == "HL" and ds not in HL_LARGE_OK:
+                out(csv_row(f"build/{ds}@{scale}/{name}", float("nan"),
+                            "skipped(hub-pairs; paper Table 7 also dashes HL here)"))
+                continue
+            builder = METHODS[name][0]
+            try:
+                dt, idx = time_once(lambda b=builder: b(g))
+                out(csv_row(f"build/{ds}@{scale}/{name}", dt * 1e6,
+                            f"n={g.n};m={g.m};size_ints={idx.index_size_ints}"))
+            except MemoryError:
+                out(csv_row(f"build/{ds}@{scale}/{name}", float("nan"), "OOM"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Figures 3 & 4: index size (total integers) per method per dataset."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    LARGE_DATASETS,
+    LARGE_SCALE,
+    METHODS,
+    SMALL_DATASETS,
+    csv_row,
+    load_dataset,
+)
+
+
+def run(*, out=print):
+    out("# fig3_index_size_small (paper Figure 3)")
+    out("name,us_per_call,derived")
+    for ds in SMALL_DATASETS:
+        g = load_dataset(ds, scale=1.0)
+        for name in ("GRAIL", "INTERVAL", "PWAH", "K-REACH", "2HOP", "HL", "DL"):
+            builder = METHODS[name][0]
+            idx = builder(g)
+            out(csv_row(f"size/{ds}/{name}", 0.0,
+                        f"size_ints={idx.index_size_ints};per_vertex={idx.index_size_ints / g.n:.2f}"))
+
+    out("# fig4_index_size_large (paper Figure 4; scaled analogues)")
+    out("name,us_per_call,derived")
+    for ds in LARGE_DATASETS[:3]:
+        scale = LARGE_SCALE[ds]
+        g = load_dataset(ds, scale=scale)
+        for name in ("GRAIL", "INTERVAL", "HL", "DL"):
+            builder = METHODS[name][0]
+            idx = builder(g)
+            out(csv_row(f"size/{ds}@{scale}/{name}", 0.0,
+                        f"size_ints={idx.index_size_ints};per_vertex={idx.index_size_ints / g.n:.2f}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Kernel microbench: interpret-mode wall time is NOT hardware-representative
+(TPU is the target); this reports the jnp reference path timings (the XLA-CPU
+floor) and validates kernel/ref agreement at bench shapes."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels import ops, ref
+
+
+def _t(fn, n=5):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jnp.asarray(out).block_until_ready() if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / n
+
+
+def run(*, out=print):
+    out("# kernel_bench (ref-path timings + kernel/ref agreement)")
+    out("name,us_per_call,derived")
+    rng = np.random.default_rng(0)
+
+    B, L = 8192, 64
+    a = rng.integers(0, 1000, size=(B, L)).astype(np.int32)
+    b = rng.integers(0, 1000, size=(B, L)).astype(np.int32)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    dt = _t(lambda: ref.label_intersect_ref(aj, bj).block_until_ready())
+    agree = bool(
+        (np.asarray(ops.label_intersect(aj, bj)) == np.asarray(ref.label_intersect_ref(aj, bj))).all()
+    )
+    out(csv_row("kernel/label_intersect", dt * 1e6, f"B={B};L={L};kernel_agrees={agree}"))
+
+    n = 1024
+    w = (n + 31) // 32
+    A = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    X = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    Aj, Xj = jnp.asarray(A), jnp.asarray(X)
+    dt = _t(lambda: ref.bitset_mm_ref(Aj, Xj).block_until_ready())
+    agree = bool((np.asarray(ops.bitset_mm(Aj, Xj)) == np.asarray(ref.bitset_mm_ref(Aj, Xj))).all())
+    out(csv_row("kernel/bitset_mm", dt * 1e6, f"n={n};kernel_agrees={agree}"))
+
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)).astype(np.float32))
+    dt = _t(lambda: ref.flash_attention_ref(q, k, v, causal=True).block_until_ready())
+    kout = np.asarray(ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128))
+    agree = bool(np.allclose(kout, np.asarray(ref.flash_attention_ref(q, k, v, causal=True)),
+                             rtol=2e-4, atol=2e-4))
+    out(csv_row("kernel/flash_attention", dt * 1e6, f"S=1024;GQA4;kernel_agrees={agree}"))
+
+    nbr = rng.integers(0, 4096, size=(4096, 16)).astype(np.int32)
+    wgt = rng.standard_normal((4096, 16)).astype(np.float32)
+    x = rng.standard_normal((4096, 64)).astype(np.float32)
+    nj, wj, xj = jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(x)
+    dt = _t(lambda: ref.ell_spmm_ref(nj, wj, xj).block_until_ready())
+    out(csv_row("kernel/ell_spmm(ref)", dt * 1e6, "n=4096;deg=16;f=64"))
+
+    table = rng.standard_normal((100_000, 16)).astype(np.float32)
+    idx = rng.integers(0, 100_000, size=(8192, 8)).astype(np.int32)
+    tj, ij = jnp.asarray(table), jnp.asarray(idx)
+    mask = jnp.asarray(idx >= 0)
+    dt = _t(lambda: ref.embedding_bag_ref(tj, ij, mask).block_until_ready())
+    out(csv_row("kernel/embedding_bag(ref)", dt * 1e6, "V=100k;B=8192;bag=8"))
+
+
+if __name__ == "__main__":
+    run()

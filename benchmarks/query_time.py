@@ -1,0 +1,79 @@
+"""Paper Tables 2/3 (small) & 5/6 (large): query time, equal + random loads.
+
+Reports host-side per-query latency for every method, plus the DEVICE
+batched serve path (the oracle's real serving mode) for DL.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    LARGE_DATASETS,
+    LARGE_SCALE,
+    METHODS,
+    SMALL_DATASETS,
+    csv_row,
+    load_dataset,
+)
+from repro.core.query import serve_step
+from repro.graph.reach import sample_query_workload, transitive_closure_bits
+
+N_QUERIES_HOST = 2000
+N_QUERIES_DEV = 100_000
+
+
+def _bench_methods(g, queries, methods, ds_tag, out):
+    for name in methods:
+        builder = METHODS[name][0]
+        idx = builder(g)
+        t0 = time.perf_counter()
+        for u, v in queries:
+            idx.query(int(u), int(v))
+        dt = time.perf_counter() - t0
+        out(csv_row(f"query/{ds_tag}/{name}", dt / len(queries) * 1e6,
+                    f"n={g.n};queries={len(queries)}"))
+        if name == "DL":
+            # device batched serving (the production path)
+            lo, li = idx.oracle.device_labels()
+            rng = np.random.default_rng(1)
+            qd = jnp.asarray(rng.integers(0, g.n, size=(N_QUERIES_DEV, 2), dtype=np.int32))
+            serve_step(lo, li, qd[:1024]).block_until_ready()  # compile
+            t0 = time.perf_counter()
+            serve_step(lo, li, qd).block_until_ready()
+            dt = time.perf_counter() - t0
+            out(csv_row(f"query/{ds_tag}/DL-device-batch", dt / N_QUERIES_DEV * 1e6,
+                        f"batch={N_QUERIES_DEV}"))
+
+
+def run(*, out=print):
+    from benchmarks.common import HL_LARGE_OK
+
+    small_methods = ["BFS", "GRAIL", "INTERVAL", "PWAH", "K-REACH", "2HOP", "HL", "DL"]
+    large_methods = ["GRAIL", "INTERVAL", "HL", "DL"]
+
+    for table, equal in (("table2_query_equal_small", True), ("table3_query_random_small", False)):
+        out(f"# {table} (paper Table {'2' if equal else '3'})")
+        out("name,us_per_call,derived")
+        for ds in SMALL_DATASETS[:4]:
+            g = load_dataset(ds, scale=1.0)
+            tc = transitive_closure_bits(g)
+            rng = np.random.default_rng(0)
+            q, _ = sample_query_workload(g, N_QUERIES_HOST, rng, equal=equal, tc=tc)
+            _bench_methods(g, q, small_methods, f"{ds}/{'eq' if equal else 'rnd'}", out)
+
+    out("# table5_6_query_large (paper Tables 5/6; scaled analogues)")
+    out("name,us_per_call,derived")
+    for ds in LARGE_DATASETS[:3]:
+        scale = LARGE_SCALE[ds]
+        g = load_dataset(ds, scale=scale)
+        rng = np.random.default_rng(0)
+        q = rng.integers(0, g.n, size=(N_QUERIES_HOST, 2)).astype(np.int32)
+        methods = [m for m in large_methods if m != "HL" or ds in HL_LARGE_OK]
+        _bench_methods(g, q, methods, f"{ds}@{scale}/rnd", out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark driver — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only query_time
+
+Prints ``name,us_per_call,derived`` CSV sections.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only",
+        default=None,
+        choices=[None, "query_time", "construction_time", "index_size", "kernel_bench"],
+    )
+    args = ap.parse_args()
+
+    from benchmarks import construction_time, index_size, kernel_bench, query_time
+
+    sections = {
+        "kernel_bench": kernel_bench.run,
+        "index_size": index_size.run,
+        "construction_time": construction_time.run,
+        "query_time": query_time.run,
+    }
+    flushing = lambda s: print(s, flush=True)
+    t0 = time.perf_counter()
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n## section: {name}", flush=True)
+        fn(out=flushing)
+    print(f"\n## total_bench_seconds,{time.perf_counter() - t0:.1f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

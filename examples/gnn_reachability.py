@@ -1,0 +1,67 @@
+"""Oracle x GNN integration (DESIGN.md §Arch-applicability): hop labels as
+reachability features for a GCN node classifier on a DAG.
+
+The oracle is built once on the workload graph; each vertex's label lengths
+and top-hop ids become extra node features — the "reachability feature
+channel" the framework exposes to the GNN family.
+
+  PYTHONPATH=src python examples/gnn_reachability.py
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distribution_labeling
+from repro.data.synth import graph_batch_from_csr
+from repro.graph.generators import layered_dag
+from repro.models.gnn import gcn
+from repro.optim import adamw_init, adamw_update
+
+
+def main():
+    g = layered_dag(600, 2.5, seed=0)
+    oracle = distribution_labeling(g)
+    print(f"graph n={g.n} m={g.m}; oracle {oracle.total_label_size} ints")
+
+    d_base = 16
+    batch = graph_batch_from_csr(g, d_base, seed=0, n_classes=4)
+    # reachability feature channel: [out_len, in_len, min_out_hop_rank]
+    reach_feats = np.stack(
+        [
+            oracle.out_len / max(oracle.out_len.max(), 1),
+            oracle.in_len / max(oracle.in_len.max(), 1),
+            oracle.L_out[:, 0] / g.n,
+        ],
+        axis=1,
+    ).astype(np.float32)
+    x = jnp.concatenate([batch.x, jnp.asarray(reach_feats)], axis=1)
+    batch = batch._replace(x=x)
+    # labels correlated with reachability depth (so the channel helps)
+    from repro.graph.reach import bfs_levels
+
+    lv = bfs_levels(g, int(np.argmax(oracle.out_len)))
+    y = np.clip(lv, 0, 3).astype(np.int32)
+    batch = batch._replace(y=jnp.asarray(y))
+
+    cfg = gcn.GCNConfig(n_layers=2, d_in=d_base + 3, d_hidden=32, n_classes=4)
+    params = gcn.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(partial(gcn.loss_fn, cfg))(params, batch)
+        params, opt, _ = adamw_update(grads, opt, params, 5e-3)
+        return params, opt, loss
+
+    for s in range(60):
+        params, opt, loss = step(params, opt)
+        if s % 20 == 0 or s == 59:
+            logits = gcn.forward(cfg, params, batch)
+            acc = float((jnp.argmax(logits, -1) == batch.y).mean())
+            print(f"step {s:3d} loss {float(loss):.4f} acc {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

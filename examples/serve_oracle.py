@@ -1,0 +1,16 @@
+"""End-to-end serving driver (the paper is an indexing/serving system, so
+this is the paper-kind end-to-end example): build the Distribution-Labeling
+index on a dataset analogue and serve 100k batched requests with correctness
+checks and throughput reporting.
+
+  PYTHONPATH=src python examples/serve_oracle.py
+  PYTHONPATH=src python examples/serve_oracle.py --dataset cit-Patents --scale 0.01
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--dataset", "citeseer", "--scale", "0.02", "--n-queries", "100000"]
+    main()

@@ -1,0 +1,81 @@
+"""Train a small LM end-to-end with checkpoint/restart fault tolerance.
+
+Default: ~10M-param danube-family model, 120 steps, CPU-tractable. Scale up
+with --d-model/--layers/--steps on real hardware (the production config is
+`--arch h2o-danube-1.8b` without --smoke via repro.launch.train).
+
+  PYTHONPATH=src python examples/train_lm.py
+  PYTHONPATH=src python examples/train_lm.py --fail-at 40   # crash + restart
+"""
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synth import lm_batch
+from repro.ft import FaultTolerantLoop, SimulatedFailure
+from repro.models import transformer as tf
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = tf.LMConfig(
+        name="example-lm",
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 2),
+        n_kv_heads=max(args.d_model // 128, 1),
+        d_ff=args.d_model * 3,
+        vocab=args.vocab,
+        window=args.seq,
+        dtype=jnp.float32,
+        remat=False,
+    )
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(state, batch):
+        params, opt = state
+        loss, grads = jax.value_and_grad(partial(tf.lm_loss, cfg))(params, batch)
+        lr = cosine_schedule(opt.step, args.lr, warmup=20, total=args.steps)
+        params, opt, metrics = adamw_update(grads, opt, params, lr)
+        metrics["loss"] = loss
+        return (params, opt), metrics
+
+    loop = FaultTolerantLoop(
+        step_fn=step,
+        batch_fn=lambda s: lm_batch(0, s, args.batch, args.seq, cfg.vocab),
+        init_state=(params, opt),
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=20,
+        fail_at=args.fail_at,
+    )
+    try:
+        loop.run(args.steps)
+    except SimulatedFailure as e:
+        print(f"!! {e} — restarting from latest checkpoint")
+        loop.maybe_restore()
+        loop.run(args.steps)
+    for m in loop.metrics_log:
+        print({k: round(v, 4) if isinstance(v, float) else v for k, v in m.items()})
+    first, last = loop.metrics_log[0]["loss"], loop.metrics_log[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Architecture registry: one module per assigned arch + the paper's own.
+
+Each arch module exposes:
+  ARCH_ID        str
+  FAMILY         'lm' | 'gnn' | 'recsys' | 'oracle'
+  full_config()  exact published config (dry-run only — never allocated)
+  smoke_config() reduced same-family config (CPU tests)
+  SHAPES         tuple of shape names valid for this arch
+  cells(shape, mesh, variant='baseline') -> CellSpec (see configs.cell)
+"""
+from __future__ import annotations
+
+import importlib
+
+_ARCH_MODULES = {
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "gcn-cora": "repro.configs.gcn_cora",
+    "graphcast": "repro.configs.graphcast_cfg",
+    "schnet": "repro.configs.schnet_cfg",
+    "gatedgcn": "repro.configs.gatedgcn_cfg",
+    "xdeepfm": "repro.configs.xdeepfm_cfg",
+    "reachability-oracle": "repro.configs.reachability",
+}
+
+ALL_ARCHS = tuple(_ARCH_MODULES)
+ASSIGNED_ARCHS = tuple(a for a in ALL_ARCHS if a != "reachability-oracle")
+
+
+def get_arch(arch_id: str):
+    return importlib.import_module(_ARCH_MODULES[arch_id])

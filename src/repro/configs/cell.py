@@ -1,0 +1,86 @@
+"""CellSpec: one (architecture x input-shape x mesh) dry-run unit.
+
+A cell carries everything dryrun.py needs to `.lower().compile()` at
+production scale with zero allocation: the step callable, ShapeDtypeStruct
+argument specs, and in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode | serve | retrieval | build
+    fn: Callable
+    args: Tuple[Any, ...]          # pytrees of ShapeDtypeStruct
+    in_shardings: Any
+    out_shardings: Any = None
+    donate_argnums: Tuple[int, ...] = ()
+    skip: Optional[str] = None     # populated when the cell is inapplicable
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def lower(self):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        return jitted.lower(*self.args)
+
+
+def shardings_of(mesh: Mesh, pspecs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def data_axes_of(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def zero_pspecs(shape_tree: Any, pspec_tree: Any, mesh: Mesh) -> Any:
+    """ZeRO sharding for optimizer state: take each param's pspec and
+    additionally shard the first free, divisible dimension over the DP axes.
+    Falls back to the param spec when nothing divides."""
+    axes = data_axes_of(mesh)
+    dp = dp_size(mesh)
+
+    def one(sds, spec):
+        dims = tuple(sds.shape)
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        for i, (d, s) in enumerate(zip(dims, entries)):
+            if s is None and d > 0 and d % dp == 0:
+                entries[i] = axes if len(axes) > 1 else axes[0]
+                return P(*entries)
+        return P(*entries)
+
+    return jax.tree.map(one, shape_tree, pspec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """Shard the leading (batch) dim over all DP axes."""
+    axes = data_axes_of(mesh)
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * extra_dims))
+
+
+def spec_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree)
+    )

@@ -1,0 +1,45 @@
+"""gatedgcn [arXiv:2003.00982]: 16 layers, d_hidden=70, gated aggregator."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.configs.gnn_cells import GNN_SHAPES, gnn_train_cell, shape_dims
+from repro.models.gnn import gatedgcn
+
+ARCH_ID = "gatedgcn"
+FAMILY = "gnn"
+SHAPES = tuple(GNN_SHAPES)
+D_EDGE = 8
+
+
+def full_config(d_in: int = 1433) -> gatedgcn.GatedGCNConfig:
+    return gatedgcn.GatedGCNConfig(
+        name=ARCH_ID, n_layers=16, d_in=d_in, d_edge_in=D_EDGE, d_hidden=70, n_classes=8
+    )
+
+
+def smoke_config() -> gatedgcn.GatedGCNConfig:
+    return gatedgcn.GatedGCNConfig(
+        name=ARCH_ID + "-smoke", n_layers=3, d_in=8, d_edge_in=4, d_hidden=16, n_classes=4
+    )
+
+
+def cells(shape: str, mesh, variant: str = "baseline"):
+    _, _, d_feat = shape_dims(shape)
+    cfg = full_config(d_in=d_feat)
+    if variant in ("dstlocal", "opt"):
+        # hillclimbed message passing: dst-local edge layout + shard_map —
+        # kills the dense-partial all-reduces (EXPERIMENTS.md §Perf)
+        from repro.configs.cell import data_axes_of
+
+        loss = gatedgcn.make_dstlocal_loss(cfg, mesh, data_axes_of(mesh))
+    else:
+        loss = partial(gatedgcn.loss_fn, cfg)
+    return gnn_train_cell(
+        ARCH_ID, shape, mesh,
+        loss_fn=loss,
+        init_fn=lambda: gatedgcn.init_params(cfg, jax.random.PRNGKey(0)),
+        d_edge=D_EDGE,
+    )

@@ -1,0 +1,32 @@
+"""gcn-cora [arXiv:1609.02907]: 2 layers, d_hidden=16, mean/sym aggregator.
+d_in follows the shape cell's d_feat (1433 on full_graph_sm = Cora)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.configs.gnn_cells import GNN_SHAPES, gnn_train_cell, shape_dims
+from repro.models.gnn import gcn
+
+ARCH_ID = "gcn-cora"
+FAMILY = "gnn"
+SHAPES = tuple(GNN_SHAPES)
+
+
+def full_config(d_in: int = 1433) -> gcn.GCNConfig:
+    return gcn.GCNConfig(name=ARCH_ID, n_layers=2, d_in=d_in, d_hidden=16, n_classes=7)
+
+
+def smoke_config() -> gcn.GCNConfig:
+    return gcn.GCNConfig(name=ARCH_ID + "-smoke", n_layers=2, d_in=8, d_hidden=8, n_classes=4)
+
+
+def cells(shape: str, mesh, variant: str = "baseline"):
+    _, _, d_feat = shape_dims(shape)
+    cfg = full_config(d_in=d_feat)
+    return gnn_train_cell(
+        ARCH_ID, shape, mesh,
+        loss_fn=partial(gcn.loss_fn, cfg),
+        init_fn=lambda: gcn.init_params(cfg, jax.random.PRNGKey(0)),
+    )

@@ -1,0 +1,200 @@
+"""Cell factory for the LM family (train / prefill / decode / long-decode).
+
+Shapes (assignment):
+  train_4k     seq 4,096   global_batch 256   -> train_step (fwd+bwd+AdamW,
+                                                 grad accumulation)
+  prefill_32k  seq 32,768  global_batch 32    -> prefill (chunked attention)
+  decode_32k   cache 32,768 global_batch 128  -> decode_step (KV/MLA cache)
+  long_500k    cache 524,288 global_batch 1   -> decode_step; ONLY for
+               sub-quadratic archs (SWA) — full-attention archs skip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.cell import (
+    CellSpec,
+    batch_pspec,
+    data_axes_of,
+    dp_size,
+    shardings_of,
+    zero_pspecs,
+)
+from repro.data.synth import lm_batch_specs
+from repro.models import transformer as tf
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _params_specs(cfg: tf.LMConfig):
+    return jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _cache_pspecs(cfg: tf.LMConfig, mesh, batch: int):
+    """Mesh-aware cache sharding. GQA cache [L, B, Hkv, T, Dh]:
+    prefer kv-head sharding over the model axis; fall back to head_dim; for
+    batch==1 (long-context) shard T over data. MLA cache [L, B, T, lora]
+    shards lora over model."""
+    axes = data_axes_of(mesh)
+    dlead = axes if len(axes) > 1 else axes[0]
+    msz = mesh.shape["model"]
+    dp = dp_size(mesh)
+    if cfg.mla is not None:
+        bspec = dlead if batch % dp == 0 and batch >= dp else None
+        tspec = None if bspec is not None else dlead
+        return {
+            "c_kv": P(None, bspec, tspec, "model" if cfg.mla.kv_lora % msz == 0 else None),
+            "k_rope": P(None, bspec, tspec, None),
+            "pos": P(),
+        }
+    if cfg.n_kv_heads % msz == 0:
+        head_axis, hd_axis = "model", None
+    elif cfg.head_dim % msz == 0:
+        head_axis, hd_axis = None, "model"
+    else:
+        head_axis = hd_axis = None
+    bspec = dlead if batch % dp == 0 and batch >= dp else None
+    tspec = None if bspec is not None else dlead
+    spec = P(None, bspec, head_axis, tspec, hd_axis)
+    return {"k": spec, "v": spec, "pos": P()}
+
+
+def make_train_step(cfg: tf.LMConfig, n_accum: int, mesh):
+    axes = data_axes_of(mesh)
+    dlead = axes if len(axes) > 1 else axes[0]
+
+    def train_step(params, opt_state, batch):
+        def accum(carry, mb):
+            g_acc, loss_acc = carry
+            mb = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(mesh, P(dlead, None))
+                ),
+                mb,
+            )
+            loss, g = jax.value_and_grad(partial(tf.lm_loss, cfg))(params, mb)
+            g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g, loss_acc + loss), None
+
+        micro = jax.tree.map(
+            lambda x: x.reshape(n_accum, x.shape[0] // n_accum, *x.shape[1:]), batch
+        )
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(accum, (zeros, jnp.float32(0)), micro)
+        grads = jax.tree.map(lambda g: g / n_accum, grads)
+        lr = cosine_schedule(opt_state.step, 3e-4, warmup=2000, total=100_000)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, lr)
+        metrics["loss"] = loss_sum / n_accum
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def lm_cell(
+    cfg: tf.LMConfig,
+    arch_id: str,
+    shape: str,
+    mesh,
+    variant: str = "baseline",
+    accum_micro_per_device: int = 1,
+    sub_quadratic: bool = False,
+) -> CellSpec:
+    info = LM_SHAPES[shape]
+    kind = info["kind"]
+    seq, batch = info["seq"], info["batch"]
+
+    if shape == "long_500k" and not sub_quadratic:
+        return CellSpec(
+            arch=arch_id, shape=shape, kind=kind, fn=None, args=(),
+            in_shardings=None,
+            skip="full-attention arch: 500k decode requires sub-quadratic attention "
+                 "(see DESIGN.md SS4)",
+        )
+
+    # variant knobs (hillclimbing switches these)
+    attn_impl = "chunked_skip" if ("skip" in variant or variant == "opt") else "chunked"
+    cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+
+    params_specs = _params_specs(cfg)
+    pspecs = tf.param_pspecs(cfg)
+    param_sh = shardings_of(mesh, pspecs)
+    dp = dp_size(mesh)
+    tp = mesh.shape["model"]
+
+    if kind == "train":
+        micro = accum_micro_per_device * dp
+        n_accum = max(batch // micro, 1)
+        opt_specs = jax.eval_shape(adamw_init, params_specs)
+        opt_sh = shardings_of(mesh, _opt_pspecs(params_specs, pspecs, mesh))
+        batch_specs = lm_batch_specs(batch, seq)
+        batch_sh = shardings_of(
+            mesh, jax.tree.map(lambda _: batch_pspec(mesh, 1), batch_specs)
+        )
+        fn = make_train_step(cfg, n_accum, mesh)
+        from repro.launch.analytic import lm_train_terms
+
+        return CellSpec(
+            arch=arch_id, shape=shape, kind=kind, fn=fn,
+            args=(params_specs, opt_specs, batch_specs),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+            meta=dict(
+                n_accum=n_accum, tokens=batch * seq,
+                model_params=cfg.param_count(),
+                active_params=cfg.active_param_count(),
+                analytic=lm_train_terms(cfg, batch, seq, n_accum, dp, tp),
+            ),
+        )
+
+    if kind == "prefill":
+        batch_specs = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        fn = partial(tf.prefill, cfg)
+        from repro.launch.analytic import lm_prefill_terms
+
+        return CellSpec(
+            arch=arch_id, shape=shape, kind=kind, fn=fn,
+            args=(params_specs, batch_specs),
+            in_shardings=(param_sh, shardings_of(mesh, batch_pspec(mesh, 1))),
+            meta=dict(tokens=batch * seq, model_params=cfg.param_count(),
+                      active_params=cfg.active_param_count(),
+                      analytic=lm_prefill_terms(cfg, batch, seq, dp, tp)),
+        )
+
+    # decode
+    cache_specs = jax.eval_shape(lambda: tf.init_cache(cfg, batch, seq))
+    cache_sh = shardings_of(mesh, _cache_pspecs(cfg, mesh, batch))
+    tok_specs = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tok_spec_p = batch_pspec(mesh, 1) if batch % dp == 0 and batch >= dp else P(None, None)
+    fn = partial(tf.decode_step, cfg)
+    from repro.launch.analytic import lm_decode_terms
+
+    return CellSpec(
+        arch=arch_id, shape=shape, kind=kind, fn=fn,
+        args=(params_specs, cache_specs, tok_specs),
+        in_shardings=(param_sh, cache_sh, shardings_of(mesh, tok_spec_p)),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+        meta=dict(tokens=batch, cache_len=seq, model_params=cfg.param_count(),
+                  active_params=cfg.active_param_count(),
+                  analytic=lm_decode_terms(cfg, batch, seq, dp, tp)),
+    )
+
+
+def _opt_pspecs(params_specs, pspecs, mesh):
+    from repro.optim.adamw import AdamWState
+
+    zp = zero_pspecs(params_specs, pspecs, mesh)
+    return AdamWState(step=P(), mu=zp, nu=zp, master=zp)

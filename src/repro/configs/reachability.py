@@ -1,0 +1,102 @@
+"""The paper's own architecture: the reachability oracle at production scale.
+
+Cells (these are EXTRA, beyond the 40 assigned-pool cells):
+  serve_1m      batched oracle queries: n=10M vertices, L_max=64, 1M-query
+                batch -> serve_step (gather 2 label rows + intersect)
+  serve_xl      n=25M (uniprotenc_150m scale), L_max=32, 1M queries
+  build_sweep   one Distribution-Labeling iteration (distribute_one) at
+                n=10M, m=30M: the per-vertex unit of the distributed build
+  build_sweep_xl n=25M, m=25M (tree-like, uniprot scale)
+
+Labels shard over the data axes (vertex-partitioned, labels live with their
+vertex shard); query batches shard over data; the frontier bitmap is the only
+per-step cross-shard exchange in the build sweep.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.cell import CellSpec, data_axes_of, shardings_of
+from repro.core.distribution_jax import LabelState, distribute_one
+from repro.core.query import serve_step
+
+ARCH_ID = "reachability-oracle"
+FAMILY = "oracle"
+SHAPES = ("serve_1m", "serve_xl", "build_sweep", "build_sweep_xl")
+
+ORACLE_SHAPES = {
+    "serve_1m": dict(kind="serve", n=10_000_000, l_max=64, queries=1_000_000),
+    "serve_xl": dict(kind="serve", n=25_000_000, l_max=32, queries=1_000_000),
+    "build_sweep": dict(kind="build", n=10_000_000, m=30_000_000, l_max=64),
+    "build_sweep_xl": dict(kind="build", n=25_000_000, m=25_000_000, l_max=32),
+}
+
+
+def full_config():
+    return dict(ORACLE_SHAPES)
+
+
+def smoke_config():
+    return dict(n=200, m=500, l_max=16, queries=64)
+
+
+def cells(shape: str, mesh, variant: str = "baseline"):
+    info = ORACLE_SHAPES[shape]
+    axes = data_axes_of(mesh)
+    lead = axes if len(axes) > 1 else axes[0]
+    n = info["n"]
+    l_max = info["l_max"]
+
+    if info["kind"] == "serve":
+        B = info["queries"]
+        label_spec = jax.ShapeDtypeStruct((n, l_max), jnp.int32)
+        q_spec = jax.ShapeDtypeStruct((B, 2), jnp.int32)
+        # labels vertex-sharded over data axes; queries data-sharded; the
+        # row gather crosses shards (all-to-all-ish) — the serve collective
+        label_sh = shardings_of(mesh, P(lead, None))
+        q_sh = shardings_of(mesh, P(lead, None))
+        fn = lambda lo, li, q: serve_step(lo, li, q)
+        return CellSpec(
+            arch=ARCH_ID, shape=shape, kind="serve", fn=fn,
+            args=(label_spec, label_spec, q_spec),
+            in_shardings=(label_sh, label_sh, q_sh),
+            meta=dict(n=n, l_max=l_max, queries=B),
+        )
+
+    # build sweep: one distribute_one iteration at full scale
+    m = info["m"]
+    state_spec = LabelState(
+        L_out=jax.ShapeDtypeStruct((n, l_max), jnp.int32),
+        L_in=jax.ShapeDtypeStruct((n, l_max), jnp.int32),
+        out_len=jax.ShapeDtypeStruct((n,), jnp.int32),
+        in_len=jax.ShapeDtypeStruct((n,), jnp.int32),
+        overflow=jax.ShapeDtypeStruct((), jnp.bool_),
+    )
+    state_sh = LabelState(
+        L_out=shardings_of(mesh, P(lead, None)),
+        L_in=shardings_of(mesh, P(lead, None)),
+        out_len=shardings_of(mesh, P(lead)),
+        in_len=shardings_of(mesh, P(lead)),
+        overflow=shardings_of(mesh, P()),
+    )
+    edge_spec = jax.ShapeDtypeStruct((m,), jnp.int32)
+    edge_sh = shardings_of(mesh, P(lead))
+    vi_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    # bound BFS depth: real diameters are <= a few hundred; 64 is the
+    # production sweep bound (deeper graphs re-enter the loop).
+    # variant 'rowfix': one-hot row extraction (kills the 2x2.56GB label
+    # matrix all-gathers — see EXPERIMENTS.md §Perf).
+    row_mode = "onehot" if variant in ("rowfix", "opt") else "gather"
+    fn = partial(distribute_one, n=n, max_steps=64, row_extract=row_mode)
+    return CellSpec(
+        arch=ARCH_ID, shape=shape, kind="build", fn=fn,
+        args=(state_spec, vi_spec, edge_spec, edge_spec, edge_spec, edge_spec),
+        in_shardings=(state_sh, shardings_of(mesh, P()), edge_sh, edge_sh, edge_sh, edge_sh),
+        out_shardings=state_sh,
+        donate_argnums=(0,),
+        meta=dict(n=n, m=m, l_max=l_max),
+    )

@@ -1,0 +1,37 @@
+"""schnet [arXiv:1706.08566]: 3 interactions, d=64, 300 RBFs, cutoff 10.
+Positions are synthesized for non-molecular shape cells (the kernel regime —
+pairwise RBF gather/scatter — is shape-independent)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.configs.gnn_cells import GNN_SHAPES, gnn_train_cell, shape_dims
+from repro.models.gnn import schnet
+
+ARCH_ID = "schnet"
+FAMILY = "gnn"
+SHAPES = tuple(GNN_SHAPES)
+
+
+def full_config() -> schnet.SchNetConfig:
+    return schnet.SchNetConfig(
+        name=ARCH_ID, n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0
+    )
+
+
+def smoke_config() -> schnet.SchNetConfig:
+    return schnet.SchNetConfig(
+        name=ARCH_ID + "-smoke", n_interactions=2, d_hidden=16, n_rbf=20, cutoff=5.0
+    )
+
+
+def cells(shape: str, mesh, variant: str = "baseline"):
+    cfg = full_config()
+    return gnn_train_cell(
+        ARCH_ID, shape, mesh,
+        loss_fn=partial(schnet.loss_fn, cfg),
+        init_fn=lambda: schnet.init_params(cfg, jax.random.PRNGKey(0)),
+        with_pos=True,
+    )

@@ -1,0 +1,122 @@
+"""xdeepfm [arXiv:1803.05170]: 39 sparse fields, embed_dim=10,
+CIN 200-200-200, MLP 400-400.
+
+Shapes:
+  train_batch    B=65,536    train_step
+  serve_p99      B=512       forward (online inference)
+  serve_bulk     B=262,144   forward (offline scoring)
+  retrieval_cand B=1, C=1,000,000  batched candidate scoring (no loop)
+
+Embedding tables row-shard over the model axis (the 39 x 1M x 10 table is
+the memory + gather hot path — same layout logic as the oracle's hop-sharded
+labels)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.cell import CellSpec, batch_pspec, data_axes_of, shardings_of
+from repro.data.synth import recsys_batch_specs
+from repro.models.recsys import xdeepfm
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+ARCH_ID = "xdeepfm"
+FAMILY = "recsys"
+SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65_536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262_144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def full_config() -> xdeepfm.XDeepFMConfig:
+    return xdeepfm.XDeepFMConfig(
+        name=ARCH_ID, n_fields=39, embed_dim=10, vocab_per_field=1_000_000,
+        cin_layers=(200, 200, 200), mlp_layers=(400, 400),
+    )
+
+
+def smoke_config() -> xdeepfm.XDeepFMConfig:
+    return xdeepfm.XDeepFMConfig(
+        name=ARCH_ID + "-smoke", n_fields=6, embed_dim=8, vocab_per_field=64,
+        cin_layers=(8, 8), mlp_layers=(16,),
+    )
+
+
+def cells(shape: str, mesh, variant: str = "baseline"):
+    info = RECSYS_SHAPES[shape]
+    cfg = full_config()
+    init_fn = lambda: xdeepfm.init_params(cfg, jax.random.PRNGKey(0))
+    params_specs = jax.eval_shape(init_fn)
+    params_sh = shardings_of(mesh, xdeepfm.param_pspecs(cfg))
+
+    if info["kind"] == "train":
+        B = info["batch"]
+        batch_specs = recsys_batch_specs(B, cfg.n_fields)
+        b_sh = shardings_of(
+            mesh,
+            {"ids": batch_pspec(mesh, 1), "y": batch_pspec(mesh, 0)},
+        )
+        opt_specs = jax.eval_shape(adamw_init, params_specs)
+        from repro.configs.cell import zero_pspecs
+
+        opt_p = zero_pspecs(params_specs, xdeepfm.param_pspecs(cfg), mesh)
+        from repro.optim.adamw import AdamWState
+
+        opt_sh = shardings_of(
+            mesh, AdamWState(step=P(), mu=opt_p, nu=opt_p, master=opt_p)
+        )
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(partial(xdeepfm.loss_fn, cfg))(params, batch)
+            lr = cosine_schedule(opt_state.step, 1e-3, warmup=500, total=50_000)
+            params, opt_state, metrics = adamw_update(
+                grads, opt_state, params, lr, weight_decay=1e-5
+            )
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        return CellSpec(
+            arch=ARCH_ID, shape=shape, kind="train", fn=train_step,
+            args=(params_specs, opt_specs, batch_specs),
+            in_shardings=(params_sh, opt_sh, b_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+            meta=dict(batch=B, table_rows=cfg.n_fields * cfg.vocab_per_field),
+        )
+
+    if info["kind"] == "serve":
+        B = info["batch"]
+        ids = jax.ShapeDtypeStruct((B, cfg.n_fields), jnp.int32)
+        ids_sh = shardings_of(mesh, batch_pspec(mesh, 1))
+        fn = partial(xdeepfm.forward, cfg)
+        return CellSpec(
+            arch=ARCH_ID, shape=shape, kind="serve", fn=fn,
+            args=(params_specs, ids),
+            in_shardings=(params_sh, ids_sh),
+            meta=dict(batch=B),
+        )
+
+    # retrieval: 1 user x 1M candidates
+    C = info["n_candidates"]
+    user = jax.ShapeDtypeStruct((1, cfg.n_fields), jnp.int32)
+    cands = jax.ShapeDtypeStruct((C,), jnp.int32)
+    axes = data_axes_of(mesh)
+    lead = axes if len(axes) > 1 else axes[0]
+    fn = partial(xdeepfm.retrieval_score, cfg)
+    return CellSpec(
+        arch=ARCH_ID, shape=shape, kind="retrieval", fn=fn,
+        args=(params_specs, user, cands),
+        in_shardings=(
+            params_sh,
+            shardings_of(mesh, P(None, None)),
+            shardings_of(mesh, P(lead)),
+        ),
+        meta=dict(n_candidates=C),
+    )

@@ -1,0 +1,30 @@
+"""The paper's primary contribution: fast, scalable reachability oracles.
+
+Two construction algorithms (Hierarchical-Labeling, Distribution-Labeling),
+the oracle container, the batched/distributed query engine, and every
+baseline the paper compares against.
+"""
+from repro.core.api import CondensedOracle, build_oracle
+from repro.core.oracle import ReachabilityOracle, finalize_labels
+from repro.core.distribution import distribution_labeling
+from repro.core.distribution_jax import distribution_labeling_jax
+from repro.core.hierarchy import hierarchical_labeling, decompose
+from repro.core.backbone import one_side_backbone, fast_cover
+from repro.core.order import get_order
+from repro.core.query import serve_step, intersect_rows
+
+__all__ = [
+    "CondensedOracle",
+    "build_oracle",
+    "ReachabilityOracle",
+    "finalize_labels",
+    "distribution_labeling",
+    "distribution_labeling_jax",
+    "hierarchical_labeling",
+    "decompose",
+    "one_side_backbone",
+    "fast_cover",
+    "get_order",
+    "serve_step",
+    "intersect_rows",
+]

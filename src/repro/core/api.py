@@ -1,0 +1,69 @@
+"""Top-level oracle API: arbitrary digraphs (cycles allowed) in one call.
+
+The paper (§2) assumes SCC condensation as a preprocessing step; this is
+that step made first-class:
+
+    oracle = build_oracle(graph)            # graph may have cycles
+    oracle.query(u, v)                      # original vertex ids
+    oracle.serve(queries)                   # batched device path
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distribution import distribution_labeling
+from repro.core.hierarchy import hierarchical_labeling
+from repro.core.oracle import ReachabilityOracle
+from repro.core.query import serve_step
+from repro.graph.csr import CSRGraph
+from repro.graph.scc import condense_to_dag
+
+
+@dataclasses.dataclass(frozen=True)
+class CondensedOracle:
+    """Reachability oracle over the SCC condensation of a digraph.
+
+    Queries take ORIGINAL vertex ids; two vertices in the same SCC reach
+    each other by definition.
+    """
+
+    oracle: ReachabilityOracle
+    comp: np.ndarray  # int32[n_original] -> condensation vertex id
+
+    @property
+    def total_label_size(self) -> int:
+        return self.oracle.total_label_size
+
+    def query(self, u: int, v: int) -> bool:
+        cu, cv = int(self.comp[u]), int(self.comp[v])
+        if cu == cv:
+            return True
+        return self.oracle.query(cu, cv)
+
+    def serve(self, queries: np.ndarray) -> np.ndarray:
+        """Batched device path. queries: int32[B, 2] original ids -> bool[B]."""
+        cq = self.comp[queries].astype(np.int32)
+        lo, li = self.oracle.device_labels()
+        same = cq[:, 0] == cq[:, 1]
+        out = np.asarray(serve_step(lo, li, jnp.asarray(cq)))
+        return out | same
+
+
+def build_oracle(
+    g: CSRGraph,
+    method: Literal["distribution", "hierarchical"] = "distribution",
+    **kwargs,
+) -> CondensedOracle:
+    """Condense SCCs, then label with DL (default) or HL."""
+    dag, comp = condense_to_dag(g)
+    if method == "distribution":
+        oracle = distribution_labeling(dag, **kwargs)
+    elif method == "hierarchical":
+        oracle = hierarchical_labeling(dag, **kwargs)
+    else:
+        raise ValueError(method)
+    return CondensedOracle(oracle=oracle, comp=comp)

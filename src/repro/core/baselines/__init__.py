@@ -1,0 +1,13 @@
+"""Every approach the paper's §6 compares against (Table 2-7 columns).
+
+All are host reference implementations with a common duck-typed interface:
+  build(g) -> index object with .query(u, v) -> bool and .index_size_ints
+"""
+from repro.core.baselines.online_search import OnlineBFS
+from repro.core.baselines.grail import Grail
+from repro.core.baselines.interval import IntervalTC
+from repro.core.baselines.pwah import PWAHBitvector
+from repro.core.baselines.twohop import TwoHopSetCover
+from repro.core.baselines.kreach import KReach
+
+__all__ = ["OnlineBFS", "Grail", "IntervalTC", "PWAHBitvector", "TwoHopSetCover", "KReach"]

@@ -1,0 +1,44 @@
+"""The no-index extreme: query-time BFS with early exit (paper §2.1)."""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+class OnlineBFS:
+    name = "BFS"
+
+    def __init__(self, g: CSRGraph):
+        self.g = g
+        self._stamp = np.full(g.n, -1, dtype=np.int64)
+        self._qid = 0
+
+    @property
+    def index_size_ints(self) -> int:
+        return 0  # no index
+
+    def query(self, u: int, v: int) -> bool:
+        if u == v:
+            return True
+        g = self.g
+        self._qid += 1
+        stamp, qid = self._stamp, self._qid
+        dq = deque([u])
+        stamp[u] = qid
+        indptr, indices = g.indptr, g.indices
+        while dq:
+            x = dq.popleft()
+            for w in indices[indptr[x] : indptr[x + 1]]:
+                if w == v:
+                    return True
+                if stamp[w] != qid:
+                    stamp[w] = qid
+                    dq.append(int(w))
+        return False
+
+
+def build(g: CSRGraph) -> OnlineBFS:
+    return OnlineBFS(g)

@@ -1,0 +1,227 @@
+"""Device (JAX) formulation of Distribution-Labeling.
+
+The per-vertex unit of work in Algorithm 2 is re-expressed as dataflow:
+
+  prune lookup:  lut[x] = x in L_out(v_i)   (scatter of one label row)
+  prune test:    pruned[w] = any(lut[L_in(w, :)])          -- O(n*Lmax) gather
+  masked BFS:    frontier sweep where only unpruned vertices expand
+  label append:  L_in[w, in_len[w]] = v_i  for labeled w   -- one scatter
+
+The outer vertex loop stays ordered (the algorithm requires it — Theorem 2's
+V_s is the processed prefix), but every step inside an iteration is a dense
+vectorized op that shards over the `data` mesh axis (vertices) — this is the
+distributed-construction story for 1000+ node clusters: label state lives
+with its vertex shard; the only cross-shard exchange per BFS step is the
+frontier bitmap (all-gather of bool[n]/8 bytes) and the (tiny) label row of
+v_i (broadcast).
+
+The same `build_sweep` is what dryrun.py lowers at production scale.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.oracle import ReachabilityOracle
+from repro.core.order import get_order
+from repro.graph.csr import CSRGraph, INVALID
+
+
+class LabelState(NamedTuple):
+    L_out: jnp.ndarray   # int32[n, Lmax]
+    L_in: jnp.ndarray    # int32[n, Lmax]
+    out_len: jnp.ndarray  # int32[n]
+    in_len: jnp.ndarray   # int32[n]
+    overflow: jnp.ndarray  # bool[] — any label row exceeded Lmax
+
+
+def init_state(n: int, l_max: int) -> LabelState:
+    return LabelState(
+        L_out=jnp.full((n, l_max), INVALID, dtype=jnp.int32),
+        L_in=jnp.full((n, l_max), INVALID, dtype=jnp.int32),
+        out_len=jnp.zeros(n, dtype=jnp.int32),
+        in_len=jnp.zeros(n, dtype=jnp.int32),
+        overflow=jnp.asarray(False),
+    )
+
+
+def _membership_lut(n: int, row: jnp.ndarray) -> jnp.ndarray:
+    """bool[n]: lut[x] = x appears in `row` (row is INVALID padded)."""
+    lut = jnp.zeros(n + 1, dtype=bool)
+    idx = jnp.where(row == INVALID, n, row)  # park padding on the extra slot
+    return lut.at[idx].set(True)[:n]
+
+
+@partial(jax.jit, static_argnames=("n", "max_steps"))
+def _masked_reach(
+    source: jnp.ndarray,  # int32[] vertex id
+    pruned: jnp.ndarray,  # bool[n] — visited-but-not-expanded set
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    n: int,
+    max_steps: int,
+) -> jnp.ndarray:
+    """bool[n]: vertices visited by BFS from `source` where pruned vertices
+    do not expand. Returns the VISITED set (includes pruned frontier hits)."""
+    visited = jnp.zeros(n, dtype=bool).at[source].set(True)
+
+    bitpack = n % 32 == 0
+    bit_w = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+
+    def body(state):
+        step, visited, _ = state
+        expand = visited & ~pruned
+        if bitpack:
+            # pack the frontier to uint32 words BEFORE the edge gather: the
+            # cross-shard all-gather carries n/32 words instead of n int32
+            # flags (32-128x less wire — EXPERIMENTS.md §Perf H5)
+            words = jnp.sum(
+                expand.reshape(-1, 32).astype(jnp.uint32) * bit_w[None, :], axis=1
+            )
+            active = (words[src >> 5] >> (src & 31).astype(jnp.uint32)) & 1
+        else:
+            active = expand[src].astype(jnp.uint32)
+        # int8 payload: the scatter partial + its all-reduce carry 4x fewer
+        # bytes than int32 (EXPERIMENTS.md §Perf H4)
+        hit = jax.ops.segment_max(active.astype(jnp.int8), dst, num_segments=n) > 0
+        new = visited | hit
+        return step + 1, new, jnp.any(new != visited)
+
+    def cond(state):
+        step, _, changed = state
+        return (step < max_steps) & changed
+
+    _, visited, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), visited, jnp.bool_(True)))
+    return visited
+
+
+def _dynamic_row(M: jnp.ndarray, vi: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """Extract row vi of a (possibly row-sharded) matrix.
+
+    mode='gather' — plain M[vi]. Under SPMD with M row-sharded this makes XLA
+    ALL-GATHER the whole matrix to index one row (measured: 2 x 2.56 GB on
+    the 10M-vertex build sweep — the dominant collective).
+    mode='onehot' — sum(onehot(vi) * M): each shard reduces its local rows to
+    a [L] partial and the wire cost is one [L] all-reduce (256 B). The
+    hillclimbed default for sharded builds.
+    """
+    if mode == "gather":
+        return M[vi]
+    onehot = (jnp.arange(M.shape[0], dtype=jnp.int32) == vi).astype(M.dtype)
+    return jnp.einsum("n,nl->l", onehot, M)
+
+
+@partial(
+    jax.jit, static_argnames=("n", "max_steps", "row_extract"), donate_argnums=(0,)
+)
+def distribute_one(
+    state: LabelState,
+    vi: jnp.ndarray,  # int32[]
+    fwd_src: jnp.ndarray,
+    fwd_dst: jnp.ndarray,
+    rev_src: jnp.ndarray,
+    rev_dst: jnp.ndarray,
+    n: int,
+    max_steps: int,
+    row_extract: str = "gather",
+) -> LabelState:
+    """One iteration of Algorithm 2 (both BFS passes), fully vectorized."""
+    l_max = state.L_out.shape[1]
+
+    # ---------- reverse pass: vi -> L_out(ancestors) ----------
+    lin_vi = _dynamic_row(state.L_in, vi, row_extract)  # [Lmax] label row of vi
+    lut_in = _membership_lut(n, lin_vi)
+    # pruned[u] = L_out(u) cap L_in(vi) != empty
+    hits = jnp.take(jnp.concatenate([lut_in, jnp.zeros(1, bool)]),
+                    jnp.where(state.L_out == INVALID, n, state.L_out))
+    pruned_r = hits.any(axis=1)
+    visited_r = _masked_reach(vi, pruned_r, rev_src, rev_dst, n, max_steps)
+    labeled_r = visited_r & ~pruned_r
+    # append vi at column out_len[v] via an elementwise one-hot column mask:
+    # a scatter with [n,2] indices makes SPMD all-gather the whole label
+    # matrix (measured 2x80MB+ per iteration); this form emits ZERO
+    # collectives (EXPERIMENTS.md §Perf H6)
+    pos = jnp.minimum(state.out_len, l_max - 1)
+    col = jnp.arange(l_max, dtype=jnp.int32)[None, :] == pos[:, None]
+    L_out = jnp.where(col & labeled_r[:, None], vi, state.L_out)
+    out_len = state.out_len + labeled_r.astype(jnp.int32)
+    overflow = state.overflow | jnp.any(labeled_r & (state.out_len >= l_max))
+
+    # ---------- forward pass: vi -> L_in(descendants) ----------
+    lout_vi = _dynamic_row(L_out, vi, row_extract)
+    lut_out = _membership_lut(n, lout_vi)
+    hits_f = jnp.take(jnp.concatenate([lut_out, jnp.zeros(1, bool)]),
+                      jnp.where(state.L_in == INVALID, n, state.L_in))
+    pruned_f = hits_f.any(axis=1)
+    visited_f = _masked_reach(vi, pruned_f, fwd_src, fwd_dst, n, max_steps)
+    labeled_f = visited_f & ~pruned_f
+    pos = jnp.minimum(state.in_len, l_max - 1)
+    col = jnp.arange(l_max, dtype=jnp.int32)[None, :] == pos[:, None]
+    L_in = jnp.where(col & labeled_f[:, None], vi, state.L_in)
+    in_len = state.in_len + labeled_f.astype(jnp.int32)
+    overflow = overflow | jnp.any(labeled_f & (state.in_len >= l_max))
+
+    return LabelState(L_out=L_out, L_in=L_in, out_len=out_len, in_len=in_len, overflow=overflow)
+
+
+def distribution_labeling_jax(
+    g: CSRGraph,
+    l_max: int = 64,
+    order_name: str = "degree_product",
+    max_steps: int | None = None,
+) -> ReachabilityOracle:
+    """Full device build (host loop over vertices, jitted per-vertex sweep)."""
+    n = g.n
+    order = get_order(g, order_name)
+    fwd_src, fwd_dst = (jnp.asarray(x) for x in g.edges())
+    g_rev = g.reverse()
+    rev_src, rev_dst = (jnp.asarray(x) for x in g_rev.edges())
+    steps = n if max_steps is None else max_steps
+
+    state = init_state(n, l_max)
+    for vi in order:
+        state = distribute_one(
+            state, jnp.int32(vi), fwd_src, fwd_dst, rev_src, rev_dst, n, steps
+        )
+    if bool(state.overflow):
+        raise ValueError(f"label overflow: some row exceeded l_max={l_max}")
+
+    L_out = np.asarray(state.L_out)
+    L_in = np.asarray(state.L_in)
+    # canonicalize rows sorted ascending (INVALID = -1 sorts first; move to end)
+    def _canon(M):
+        key = np.where(M == INVALID, np.iinfo(np.int32).max, M)
+        return np.where(np.sort(key, axis=1) == np.iinfo(np.int32).max, INVALID,
+                        np.sort(key, axis=1)).astype(np.int32)
+
+    return ReachabilityOracle(
+        L_out=_canon(L_out),
+        L_in=_canon(L_in),
+        out_len=np.asarray(state.out_len),
+        in_len=np.asarray(state.in_len),
+    )
+
+
+def build_sweep_specs(n: int, m: int, l_max: int):
+    """ShapeDtypeStructs for lowering `distribute_one` at production scale
+    (used by dryrun.py — no allocation)."""
+    f32 = jnp.int32
+    state = LabelState(
+        L_out=jax.ShapeDtypeStruct((n, l_max), f32),
+        L_in=jax.ShapeDtypeStruct((n, l_max), f32),
+        out_len=jax.ShapeDtypeStruct((n,), f32),
+        in_len=jax.ShapeDtypeStruct((n,), f32),
+        overflow=jax.ShapeDtypeStruct((), jnp.bool_),
+    )
+    return dict(
+        state=state,
+        vi=jax.ShapeDtypeStruct((), f32),
+        fwd_src=jax.ShapeDtypeStruct((m,), f32),
+        fwd_dst=jax.ShapeDtypeStruct((m,), f32),
+        rev_src=jax.ShapeDtypeStruct((m,), f32),
+        rev_dst=jax.ShapeDtypeStruct((m,), f32),
+    )

@@ -1,0 +1,147 @@
+"""Hierarchical-Labeling (paper §4, Algorithm 1).
+
+1. Recursive hierarchical DAG decomposition (Definition 2): G_0 = G,
+   G_{i+1} = one-side reachability backbone of G_i, until the level graph is
+   small (<= core_max vertices) or max_levels reached.
+2. Label the core graph G_h completely (we use Distribution-Labeling; the
+   paper allows "the existing 2-hop labeling" — any complete core labeling
+   preserves Theorem 1's induction. Formula 3 is also provided for
+   diameter <= eps cores).
+3. Level-wise labeling from h-1 down to 0 (Formulas 4/5 with the L_in typo
+   corrected: L_in inherits L_in of the incoming backbone set):
+
+     L_out(v) = {v} u N1_out(v|G_i) u  U_{u in B_out(v)} L_out(u)
+     L_in(v)  = {v} u N1_in(v|G_i)  u  U_{u in B_in(v)}  L_in(u)
+
+All hop ids in the final labels are global (G_0) vertex ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Set
+
+import numpy as np
+
+from repro.core.backbone import Backbone, one_side_backbone, _khop_out
+from repro.core.distribution import distribution_labeling
+from repro.core.oracle import ReachabilityOracle, finalize_labels
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class Hierarchy:
+    """levels[i] = graph G_i with vertex ids local to level i;
+    to_global[i][local_id] = global (G_0) vertex id."""
+
+    levels: List[CSRGraph]
+    to_global: List[np.ndarray]
+    backbones: List[Backbone]  # backbones[i] maps G_i -> G_{i+1}
+
+    @property
+    def h(self) -> int:
+        return len(self.levels) - 1
+
+
+def decompose(g: CSRGraph, eps: int = 2, core_max: int = 1024, max_levels: int = 10) -> Hierarchy:
+    levels = [g]
+    to_global = [np.arange(g.n, dtype=np.int32)]
+    backbones: List[Backbone] = []
+    while levels[-1].n > core_max and len(levels) - 1 < max_levels:
+        bb = one_side_backbone(levels[-1], eps)
+        if bb.vstar.shape[0] == 0 or bb.vstar.shape[0] >= levels[-1].n:
+            break  # no reduction possible — stop decomposing
+        backbones.append(bb)
+        levels.append(bb.graph)
+        to_global.append(to_global[-1][bb.vstar])
+    return Hierarchy(levels=levels, to_global=to_global, backbones=backbones)
+
+
+def _backbone_sets(g_i: CSRGraph, in_vstar: np.ndarray, v: int, eps: int):
+    """(B_out, B_in) per Formulas 1/2: backbone vertices within eps of v,
+    pruned when another candidate lies between (d(v,x)<=eps ^ d(x,u)<=eps)."""
+    cand_out = [u for u in _khop_out(g_i, v, eps) if in_vstar[u]]
+    pruned_out: List[int] = []
+    if cand_out:
+        reach2 = {x: _khop_out(g_i, x, eps) for x in cand_out}
+        for u in cand_out:
+            if not any(x != u and u in reach2[x] for x in cand_out):
+                pruned_out.append(u)
+
+    g_rev = g_i.reverse()
+    cand_in = [u for u in _khop_out(g_rev, v, eps) if in_vstar[u]]
+    pruned_in: List[int] = []
+    if cand_in:
+        reach2r = {x: _khop_out(g_rev, x, eps) for x in cand_in}
+        for u in cand_in:
+            # exists y with d(u,y)<=eps and d(y,v)<=eps  <=>  reverse: y reaches u
+            if not any(x != u and u in reach2r[x] for x in cand_in):
+                pruned_in.append(u)
+    return pruned_out, pruned_in
+
+
+def core_labels_formula3(core: CSRGraph, eps: int = 2):
+    """Formula 3 (valid when diameter(core) <= eps): L = ceil(eps/2)-neighborhood."""
+    k = (eps + 1) // 2
+    rev = core.reverse()
+    out_lists = [sorted({v} | _khop_out(core, v, k)) for v in range(core.n)]
+    in_lists = [sorted({v} | _khop_out(rev, v, k)) for v in range(core.n)]
+    return out_lists, in_lists
+
+
+def hierarchical_labeling(
+    g: CSRGraph,
+    eps: int = 2,
+    core_max: int = 1024,
+    max_levels: int = 10,
+    core_method: str = "distribution",
+) -> ReachabilityOracle:
+    hier = decompose(g, eps=eps, core_max=core_max, max_levels=max_levels)
+    h = hier.h
+    n = g.n
+
+    out_sets: List[Set[int]] = [set() for _ in range(n)]
+    in_sets: List[Set[int]] = [set() for _ in range(n)]
+
+    # ---- core labeling (global hop ids) ----
+    core = hier.levels[h]
+    core_glob = hier.to_global[h]
+    if core_method == "formula3":
+        c_out, c_in = core_labels_formula3(core, eps)
+        for lv in range(core.n):
+            gv = int(core_glob[lv])
+            out_sets[gv] = {int(core_glob[x]) for x in c_out[lv]}
+            in_sets[gv] = {int(core_glob[x]) for x in c_in[lv]}
+    else:
+        core_oracle = distribution_labeling(core)
+        for lv in range(core.n):
+            gv = int(core_glob[lv])
+            row_o = core_oracle.L_out[lv, : core_oracle.out_len[lv]]
+            row_i = core_oracle.L_in[lv, : core_oracle.in_len[lv]]
+            out_sets[gv] = {int(core_glob[x]) for x in row_o}
+            in_sets[gv] = {int(core_glob[x]) for x in row_i}
+
+    # ---- level-wise labeling h-1 .. 0 (Formulas 4/5) ----
+    for i in range(h - 1, -1, -1):
+        g_i = hier.levels[i]
+        glob_i = hier.to_global[i]
+        bb = hier.backbones[i]
+        in_vstar = np.zeros(g_i.n, dtype=bool)
+        in_vstar[bb.vstar] = True
+        g_i_rev = g_i.reverse()
+        for lv in range(g_i.n):
+            if in_vstar[lv]:
+                continue  # labeled at a higher level
+            gv = int(glob_i[lv])
+            b_out, b_in = _backbone_sets(g_i, in_vstar, lv, eps)
+            lo: Set[int] = {gv}
+            lo.update(int(glob_i[w]) for w in g_i.out_neighbors(lv))
+            for u in b_out:
+                lo.update(out_sets[int(glob_i[u])])
+            li: Set[int] = {gv}
+            li.update(int(glob_i[w]) for w in g_i_rev.out_neighbors(lv))
+            for u in b_in:
+                li.update(in_sets[int(glob_i[u])])
+            out_sets[gv] = lo
+            in_sets[gv] = li
+
+    return finalize_labels([sorted(s) for s in out_sets], [sorted(s) for s in in_sets])

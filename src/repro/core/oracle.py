@@ -1,0 +1,106 @@
+"""ReachabilityOracle: the hop-labeling container + query paths.
+
+u reaches v  iff  L_out(u) `intersect` L_in(v) != empty.
+
+Labels are finalized into dense padded int32 matrices [n, L_max] (rows sorted
+ascending, INVALID = -1 padding) — the device/serving layout. The host keeps
+per-row lengths for exact-size accounting (paper's index-size metric counts
+total integers, Figures 3/4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import INVALID
+
+
+@dataclasses.dataclass(frozen=True)
+class ReachabilityOracle:
+    L_out: np.ndarray  # int32[n, Lo_max], sorted rows, INVALID padded
+    L_in: np.ndarray   # int32[n, Li_max]
+    out_len: np.ndarray  # int32[n]
+    in_len: np.ndarray   # int32[n]
+
+    @property
+    def n(self) -> int:
+        return int(self.L_out.shape[0])
+
+    @property
+    def total_label_size(self) -> int:
+        """Paper's index-size metric: sum(|L_out| + |L_in|) in integers."""
+        return int(self.out_len.sum() + self.in_len.sum())
+
+    @property
+    def max_label_len(self) -> int:
+        return int(max(self.L_out.shape[1], self.L_in.shape[1]))
+
+    # ---------------- host query paths ----------------
+
+    def query(self, u: int, v: int) -> bool:
+        """Single query via sorted-merge intersection (the paper's §1 fix:
+        sorted vectors, not hash sets)."""
+        a = self.L_out[u, : self.out_len[u]]
+        b = self.L_in[v, : self.in_len[v]]
+        i = j = 0
+        na, nb = a.shape[0], b.shape[0]
+        while i < na and j < nb:
+            if a[i] == b[j]:
+                return True
+            if a[i] < b[j]:
+                i += 1
+            else:
+                j += 1
+        return False
+
+    def query_batch_np(self, queries: np.ndarray) -> np.ndarray:
+        """Vectorized all-pairs-compare batch query (numpy mirror of the
+        device path). queries: int32[B, 2] -> bool[B]."""
+        a = self.L_out[queries[:, 0]]  # [B, Lo]
+        b = self.L_in[queries[:, 1]]   # [B, Li]
+        eq = a[:, :, None] == b[:, None, :]
+        valid = (a[:, :, None] != INVALID) & (b[:, None, :] != INVALID)
+        return (eq & valid).any(axis=(1, 2))
+
+    # ---------------- device arrays ----------------
+
+    def device_labels(self):
+        return jnp.asarray(self.L_out), jnp.asarray(self.L_in)
+
+
+def finalize_labels(
+    out_lists: Sequence[Sequence[int]],
+    in_lists: Sequence[Sequence[int]],
+    pad_to_multiple: int = 8,
+) -> ReachabilityOracle:
+    """Pack per-vertex python label lists into the dense oracle layout."""
+    n = len(out_lists)
+    out_len = np.array([len(x) for x in out_lists], dtype=np.int32)
+    in_len = np.array([len(x) for x in in_lists], dtype=np.int32)
+
+    def _pack(lists: Sequence[Sequence[int]], lens: np.ndarray) -> np.ndarray:
+        lmax = int(lens.max()) if n else 1
+        lmax = max(((lmax + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple, pad_to_multiple)
+        mat = np.full((n, lmax), INVALID, dtype=np.int32)
+        for i, row in enumerate(lists):
+            if row:
+                mat[i, : len(row)] = np.sort(np.asarray(row, dtype=np.int32))
+        return mat
+
+    return ReachabilityOracle(
+        L_out=_pack(out_lists, out_len),
+        L_in=_pack(in_lists, in_len),
+        out_len=out_len,
+        in_len=in_len,
+    )
+
+
+def merge_hop_lists(parts: List[np.ndarray]) -> np.ndarray:
+    """Sorted-unique union of hop id arrays (HL's label merge)."""
+    if not parts:
+        return np.empty(0, dtype=np.int32)
+    cat = np.concatenate([np.asarray(p, dtype=np.int32) for p in parts])
+    return np.unique(cat[cat != INVALID])

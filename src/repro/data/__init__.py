@@ -1,0 +1,15 @@
+from repro.data.synth import (
+    lm_batch,
+    lm_batch_specs,
+    graph_batch_from_csr,
+    recsys_batch,
+    recsys_batch_specs,
+)
+
+__all__ = [
+    "lm_batch",
+    "lm_batch_specs",
+    "graph_batch_from_csr",
+    "recsys_batch",
+    "recsys_batch_specs",
+]

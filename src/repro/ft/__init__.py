@@ -1,0 +1,3 @@
+from repro.ft.loop import FaultTolerantLoop, SimulatedFailure
+
+__all__ = ["FaultTolerantLoop", "SimulatedFailure"]

@@ -1,0 +1,82 @@
+"""Fault-tolerant training loop.
+
+Production posture for 1000+ nodes (documented here, exercised at container
+scale by tests):
+
+  * checkpoint/restart: atomic step checkpoints (params + optimizer + step);
+    on (re)start the loop scans the directory and resumes from the latest
+    complete checkpoint. Data pipeline is (seed, step)-deterministic, so no
+    reader state is persisted.
+  * node failure: in synchronous SPMD a dead host kills the step; the
+    launcher restarts the job and this loop resumes. SimulatedFailure tests
+    that path end-to-end in-process.
+  * elastic re-mesh: checkpoints are host-numpy and mesh-agnostic; a restart
+    may jit the same step onto a different mesh shape (fewer/more DP ranks)
+    — restore + re-jit is the whole migration.
+  * straggler mitigation: synchronous steps can't drop a slow rank, so the
+    levers are (a) deterministic, skew-free sharded data (no dynamic work
+    imbalance), (b) async checkpointing off the critical path, (c) bounded
+    per-step collective count (fused all-reduces), all implemented here /
+    in optim. Speculative-redundancy (hot spares) is a launcher concern,
+    noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by a fault-injection hook to emulate a node crash."""
+
+
+class FaultTolerantLoop:
+    def __init__(
+        self,
+        step_fn: Callable,           # (state, batch) -> (state, metrics)
+        batch_fn: Callable,          # (step) -> batch
+        init_state: Any,
+        ckpt_dir: str,
+        ckpt_every: int = 50,
+        keep: int = 3,
+        fail_at: Optional[int] = None,   # fault injection (tests)
+    ):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.state = init_state
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.ckpt = AsyncCheckpointer(ckpt_dir, keep=keep)
+        self.fail_at = fail_at
+        self.start_step = 0
+        self.metrics_log: list[Dict] = []
+
+    def maybe_restore(self) -> int:
+        s = latest_step(self.ckpt_dir)
+        if s is not None:
+            self.state = restore_checkpoint(self.ckpt_dir, s, self.state)
+            self.start_step = s
+        return self.start_step
+
+    def run(self, n_steps: int, log_every: int = 10) -> Any:
+        step = self.maybe_restore()
+        while step < n_steps:
+            if self.fail_at is not None and step == self.fail_at:
+                self.fail_at = None  # fail once
+                raise SimulatedFailure(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            batch = self.batch_fn(step)
+            self.state, metrics = self.step_fn(self.state, batch)
+            step += 1
+            if step % self.ckpt_every == 0 or step == n_steps:
+                self.ckpt.save(step, self.state)
+            if step % log_every == 0 or step == n_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, sec=time.perf_counter() - t0)
+                self.metrics_log.append(m)
+        self.ckpt.wait()
+        return self.state

@@ -1,0 +1,29 @@
+"""Graph substrate: CSR containers, SCC condensation, BFS, generators, sampling.
+
+Host-side (numpy) structures feed both the oracle construction algorithms and
+the JAX/device compute paths (which consume the arrays as jnp buffers).
+"""
+from repro.graph.csr import CSRGraph, from_edges, ELLGraph
+from repro.graph.scc import condense_to_dag, tarjan_scc
+from repro.graph.generators import (
+    random_dag,
+    layered_dag,
+    tree_dag,
+    scale_free_dag,
+    paper_dataset_analogue,
+    PAPER_DATASETS,
+)
+
+__all__ = [
+    "CSRGraph",
+    "ELLGraph",
+    "from_edges",
+    "condense_to_dag",
+    "tarjan_scc",
+    "random_dag",
+    "layered_dag",
+    "tree_dag",
+    "scale_free_dag",
+    "paper_dataset_analogue",
+    "PAPER_DATASETS",
+]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+  label_intersect : batched hop-label intersection (oracle query core)
+  bitset_mm       : bit-packed boolean matmul (TC closure / core labeling)
+  flash_attention : blocked online-softmax attention (causal/SWA/GQA)
+  ell_spmm        : padded-neighbor-list SpMM (GNN message passing)
+  embedding_bag   : fused gather+sum over huge tables (recsys)
+
+Use via repro.kernels.ops (jit'd, padding, interpret auto-detect); pure-jnp
+oracles in repro.kernels.ref.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: bit-packed boolean matrix multiply (OR-AND semiring).
+
+out[i, :] = OR_{j : A[i, j] = 1}  X[j, :]        (all bit-packed uint32)
+
+This is the transitive-closure / core-graph-labeling workhorse: one closure
+step is R |= A (.) R. The CPU version uses per-row word loops; the TPU
+version tiles (node-rows x k-slices x word-columns) so each grid step
+unpacks a (TN, TK) slab of A-bits in VREGs and OR-selects TK rows of X into
+a (TN, TW) VMEM accumulator. No MXU — this is pure VPU integer work, but it
+replaces 32 boolean ops per lane op (bit-packing) and streams X exactly
+n/TN times.
+
+Grid: (n/TN, wm/TW, k/TK), k innermost for accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitset_mm_kernel(a_ref, x_ref, o_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # uint32[TN, TK // 32]
+    x = x_ref[...]  # uint32[TK, TW]
+    tn, wk = a.shape
+    tk = x.shape[0]
+    # unpack A bits: bool[TN, TK]
+    bit = jnp.arange(32, dtype=jnp.uint32)
+    a_bool = ((a[:, :, None] >> bit[None, None, :]) & jnp.uint32(1)).astype(bool)
+    a_bool = a_bool.reshape(tn, wk * 32)[:, :tk]
+    # select rows of X where bit set, OR-reduce over the TK axis
+    sel = jnp.where(a_bool[:, :, None], x[None, :, :], jnp.uint32(0))
+    red = jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    o_ref[...] |= red
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_k", "block_w", "interpret")
+)
+def bitset_mm_pallas(
+    a_bits: jnp.ndarray,
+    x_bits: jnp.ndarray,
+    block_n: int = 256,
+    block_k: int = 256,
+    block_w: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """a_bits: uint32[n, k/32], x_bits: uint32[k, wm] -> uint32[n, wm].
+
+    n % block_n == 0, k % block_k == 0 (so k/32 % (block_k/32) == 0),
+    wm % block_w == 0. ops.py pads all three.
+    """
+    n, wk = a_bits.shape
+    k, wm = x_bits.shape
+    assert wk * 32 == ((k + 31) // 32) * 32 and k % 32 == 0, (wk, k)
+    assert n % block_n == 0 and k % block_k == 0 and wm % block_w == 0
+    grid = (n // block_n, wm // block_w, k // block_k)
+    wblk = block_k // 32
+    return pl.pallas_call(
+        _bitset_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, wblk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_w), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_w), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, wm), jnp.uint32),
+        interpret=interpret,
+    )(a_bits, x_bits)

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: blocked flash attention (causal / sliding-window / GQA).
+
+Online-softmax formulation (FlashAttention-2 schedule): grid is
+(batch*q_heads, S/TQ, T/TK) with the key axis innermost; running max m,
+normalizer l, and the unnormalized accumulator acc live in VMEM scratch and
+carry across key blocks. Final key block writes acc / l.
+
+Query positions are right-aligned against keys (qpos = iq + T - S), which
+makes the same kernel serve training (S == T), chunked prefill (S < T), and
+single-token decode (S == 1).
+
+Sliding-window masking (h2o-danube's SWA) composes with causal: a key block
+entirely outside [qpos - window, qpos] is skipped via the mask (the block
+index map cannot skip compute in this simple schedule — the hillclimbed
+variant in ops.py restricts the k-grid per q block instead).
+
+MXU alignment: TQ, TK multiples of 128; D is the lane dim (128 for all
+assigned LM archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, window, t_total, s_total, block_q, block_k):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # [TQ, D]
+    k = k_ref[0]  # [TK, D]
+    v = v_ref[0]  # [TK, D]
+
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [TQ, TK]
+
+    qpos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + (t_total - s_total)
+    kpos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+    mask = jnp.ones((block_q, block_k), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]          # [TQ, 1]
+    l_prev = l_scr[...]          # [TQ, 1]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (m_new == NEG_INF): exp(NEG_INF - NEG_INF) would be 1
+    row_dead = m_new <= NEG_INF / 2
+    p = jnp.exp(logits - jnp.where(row_dead, 0.0, m_new))
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - jnp.where(row_dead, 0.0, m_new))
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret", "scale"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [BH, S, D] (heads flattened into batch)
+    k: jnp.ndarray,  # [BH, T, D] (GQA repeat done in ops.py index map — here 1:1)
+    v: jnp.ndarray,  # [BH, T, D]
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, S, D = q.shape
+    _, T, _ = k.shape
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    grid = (BH, S // block_q, T // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        t_total=T,
+        s_total=S,
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

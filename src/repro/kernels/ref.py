@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INVALID = -1
+
+
+def label_intersect_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: int32[B, La], b: int32[B, Lb] (INVALID padded) -> bool[B]:
+    row-wise non-empty intersection over valid entries."""
+    eq = a[:, :, None] == b[:, None, :]
+    valid = (a[:, :, None] != INVALID) & (b[:, None, :] != INVALID)
+    return (eq & valid).any(axis=(1, 2))
+
+
+def bitset_mm_ref(a_bits: jnp.ndarray, x_bits: jnp.ndarray) -> jnp.ndarray:
+    """Boolean matrix 'multiply' over bit-packed operands.
+
+    a_bits: uint32[n, wk]  (row i = bitset over k)
+    x_bits: uint32[k, wm]  (row j = bitset over m)
+    out:    uint32[n, wm]  out[i] = OR_{j: a[i,j]} x_bits[j]
+    """
+    n, wk = a_bits.shape
+    k, wm = x_bits.shape
+    # unpack a to bool[n, k]
+    bit = jnp.arange(32, dtype=jnp.uint32)
+    a_bool = ((a_bits[:, :, None] >> bit[None, None, :]) & 1).astype(bool)
+    a_bool = a_bool.reshape(n, wk * 32)[:, :k]
+    sel = jnp.where(a_bool[:, :, None], x_bits[None, :, :], jnp.uint32(0))
+    return jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+def ell_spmm_ref(nbr: jnp.ndarray, wgt: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Padded-neighbor-list SpMM: out[i] = sum_j wgt[i,j] * x[nbr[i,j]].
+
+    nbr: int32[n, d] (INVALID padded), wgt: f32[n, d], x: f32[n_src, f].
+    """
+    safe = jnp.where(nbr == INVALID, 0, nbr)
+    gathered = x[safe]  # [n, d, f]
+    w = jnp.where(nbr == INVALID, 0.0, wgt)
+    return jnp.einsum("nd,ndf->nf", w, gathered)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """q: [B, Hq, S, D], k/v: [B, Hkv, T, D] (GQA: Hq multiple of Hkv)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) * s
+    T = k.shape[2]
+    qpos = jnp.arange(S)[:, None] + (T - S)  # right-aligned (decode-friendly)
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > (qpos - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray, idx: jnp.ndarray, offsets_mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Sum-reduce bags of embedding rows.
+
+    table: f32[V, D]; idx: int32[B, bag] (INVALID padded);
+    offsets_mask: bool[B, bag] valid mask. -> f32[B, D]
+    """
+    safe = jnp.where(idx < 0, 0, idx)
+    rows = table[safe]  # [B, bag, D]
+    return jnp.sum(jnp.where(offsets_mask[..., None], rows, 0.0), axis=1)

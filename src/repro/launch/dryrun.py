@@ -1,0 +1,166 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count at first
+init, and the production meshes need 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+      --shape train_4k --mesh multi --variant opt
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>[__variant].json:
+memory_analysis, cost_analysis FLOPs/bytes, per-kind collective bytes, and
+the three roofline terms.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCHS, get_arch
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.mesh import make_production_mesh
+
+
+def make_variant_mesh(mesh_kind: str, variant: str):
+    """The REQUIRED meshes are (16,16) and (2,16,16). Hillclimb variants may
+    remap the same 256 chips to a different logical (data, model) split —
+    'a different sharding scheme' per the perf methodology."""
+    if variant.startswith("tp"):
+        tp = int(variant[2:].split("-")[0])
+        assert 256 % tp == 0
+        return jax.make_mesh((256 // tp, tp), ("data", "model"))
+    return make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str, variant: str, out_dir: str) -> dict:
+    mesh = make_variant_mesh(mesh_kind, variant)
+    n_chips = mesh.devices.size
+    mod = get_arch(arch_id)
+    cell = mod.cells(shape, mesh, variant)
+    tag = f"{arch_id}__{shape}__{mesh_kind}" + (f"__{variant}" if variant != "baseline" else "")
+    rec: dict = dict(
+        arch=arch_id, shape=shape, mesh=mesh_kind, variant=variant,
+        n_chips=int(n_chips), kind=cell.kind, meta=cell.meta,
+    )
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip
+        _write(out_dir, tag, rec)
+        return rec
+
+    t0 = time.perf_counter()
+    try:
+        with mesh:
+            lowered = cell.lower()
+            rec["lower_s"] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.perf_counter() - t1
+
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+            cost = compiled.cost_analysis()
+            flops = float(cost.get("flops", 0.0))
+            bytes_accessed = float(cost.get("bytes accessed", 0.0))
+            rec["cost"] = {"flops": flops, "bytes_accessed": bytes_accessed}
+
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            rec["collectives"] = coll
+
+            # cost_analysis of the SPMD-partitioned module reports PER-DEVICE
+            # flops/bytes; collective bytes parsed from HLO are also
+            # per-device. Roofline terms therefore divide by 1 chip.
+            # CAVEAT: HloCostAnalysis counts while-loop bodies ONCE. LM cells
+            # (scan over layers + grad accumulation) therefore carry analytic
+            # per-device terms in meta['analytic']; loop-free families use
+            # the HLO numbers directly. Both are recorded.
+            rec["roofline_hlo"] = roofline_terms(flops, bytes_accessed, coll["total"], 1)
+            ana = cell.meta.get("analytic")
+            if ana is not None:
+                rec["roofline"] = roofline_terms(ana["flops"], ana["bytes"], ana["coll"], 1)
+                rec["roofline"]["source"] = "analytic(loop-corrected)"
+                rec["model_flops"] = ana.get("model_flops")
+            else:
+                rec["roofline"] = dict(rec["roofline_hlo"])
+                rec["roofline"]["source"] = "hlo"
+                rec["model_flops"] = cell.meta.get("model_flops")
+            rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _write(out_dir, tag, rec)
+    return rec
+
+
+def _write(out_dir: str, tag: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    n_ok = n_skip = n_err = 0
+    for arch_id in archs:
+        mod = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else list(mod.SHAPES)
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch_id}__{shape}__{mesh_kind}" + (
+                    f"__{args.variant}" if args.variant != "baseline" else ""
+                )
+                path = os.path.join(args.out, f"{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                else:
+                    rec = run_cell(arch_id, shape, mesh_kind, args.variant, args.out)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f"dom={r['dominant']} comp={r['compute_s']:.2e}s "
+                        f"mem={r['memory_s']:.2e}s coll={r['collective_s']:.2e}s "
+                        f"compile={rec.get('compile_s', 0):.1f}s"
+                    )
+                elif status == "error":
+                    extra = rec["error"][:160]
+                print(f"[{status:7s}] {tag}  {extra}", flush=True)
+    print(f"\nDRYRUN SUMMARY: ok={n_ok} skipped={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

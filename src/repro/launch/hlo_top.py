@@ -1,0 +1,68 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Hillclimb profiler: print the top-K HLO ops by result bytes for a cell.
+
+  PYTHONPATH=src python -m repro.launch.hlo_top --arch gatedgcn --shape ogb_products
+
+With no real-TPU trace available, the lowered IR *is* the profile (system
+prompt §Pallas hints): big result tensors = big HBM traffic; the collective
+list = the wire schedule.
+"""
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch.hlo_analysis import _DTYPE_BYTES, _SHAPE_RE
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+
+
+def top_ops(hlo_text: str, k: int = 20):
+    rows = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode = m.groups()
+        if opcode in ("parameter", "constant", "tuple", "get-tuple-element"):
+            continue
+        b = sum(
+            _DTYPE_BYTES[s.group(1)] * (eval(s.group(2).replace(",", "*")) if s.group(2) else 1)
+            for s in _SHAPE_RE.finditer(rtype)
+        )
+        rows.append((b, opcode, name, rtype[:60]))
+    rows.sort(reverse=True)
+    agg = defaultdict(int)
+    for b, opcode, _, _ in rows:
+        agg[opcode] += b
+    return rows[:k], sorted(agg.items(), key=lambda kv: -kv[1])[:12]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.launch.dryrun import make_variant_mesh
+
+    mesh = make_variant_mesh(args.mesh, args.variant)
+    cell = get_arch(args.arch).cells(args.shape, mesh, args.variant)
+    with mesh:
+        compiled = cell.lower().compile()
+    hlo = compiled.as_text()
+    rows, agg = top_ops(hlo, args.top)
+    print(f"== top {args.top} ops by result bytes ({args.arch}/{args.shape}/{args.variant}) ==")
+    for b, opcode, name, rtype in rows:
+        print(f"{b/1e6:10.1f} MB  {opcode:22s} {name[:40]:40s} {rtype}")
+    print("\n== bytes by opcode ==")
+    for opcode, b in agg:
+        print(f"{b/1e9:10.3f} GB  {opcode}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — dryrun.py must set XLA_FLAGS before any
+device query, and tests must see the real single-CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes_of(mesh) -> tuple:
+    """The DP axes for this mesh ('pod' folds into DP when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_parallel_size(mesh) -> int:
+    n = 1
+    for a in data_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,6 @@
+"""Assigned-architecture model zoo (pure-functional JAX).
+
+transformer.py : decoder LMs (dense GQA/SWA, MoE, MLA) — 5 LM archs
+gnn/           : GCN, GatedGCN, SchNet, GraphCast — 4 GNN archs
+recsys/        : xDeepFM — 1 recsys arch
+"""

@@ -1,0 +1,4 @@
+from repro.models.gnn.layers import GraphBatch, segment_agg
+from repro.models.gnn import gcn, gatedgcn, schnet, graphcast
+
+__all__ = ["GraphBatch", "segment_agg", "gcn", "gatedgcn", "schnet", "graphcast"]

@@ -1,0 +1,175 @@
+"""GatedGCN (Bresson & Laurent; benchmarking config of arXiv:2003.00982).
+
+Per layer, with explicit edge features:
+  e'_ij = A h_i + B h_j + C e_ij;      eta_ij = sigmoid(e'_ij)
+  h'_i  = h_i U + ( sum_j eta_ij * (h_j V) ) / ( sum_j eta_ij + eps )
+residual + LayerNorm on both node and edge streams.
+Assigned config: 16 layers, d_hidden=70, gated aggregator.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.layers import GraphBatch, segment_agg
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_in: int = 16
+    d_edge_in: int = 8
+    d_hidden: int = 70
+    n_classes: int = 8
+    dtype: object = jnp.float32
+
+
+def _lin(key, i, o, dtype):
+    return (jax.random.normal(key, (i, o)) / jnp.sqrt(i)).astype(dtype)
+
+
+def init_params(cfg: GatedGCNConfig, key):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    params = {
+        "embed_x": _lin(ks[0], cfg.d_in, d, cfg.dtype),
+        "embed_e": _lin(ks[1], cfg.d_edge_in, d, cfg.dtype),
+        "readout": _lin(ks[2], d, cfg.n_classes, cfg.dtype),
+        "layers": [],
+    }
+    for l in range(cfg.n_layers):
+        k = ks[4 + 6 * l : 4 + 6 * (l + 1)]
+        params["layers"].append(
+            {
+                "A": _lin(k[0], d, d, cfg.dtype),
+                "B": _lin(k[1], d, d, cfg.dtype),
+                "C": _lin(k[2], d, d, cfg.dtype),
+                "U": _lin(k[3], d, d, cfg.dtype),
+                "V": _lin(k[4], d, d, cfg.dtype),
+                "ln_h": jnp.ones((d,), cfg.dtype),
+                "ln_e": jnp.ones((d,), cfg.dtype),
+            }
+        )
+    return params
+
+
+def _norm(x, w):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * w
+
+
+def forward(cfg: GatedGCNConfig, params, g: GraphBatch):
+    n = g.x.shape[0]
+    h = g.x.astype(cfg.dtype) @ params["embed_x"]
+    e_attr = g.edge_attr if g.edge_attr is not None else jnp.zeros(
+        (g.edge_src.shape[0], cfg.d_edge_in), cfg.dtype
+    )
+    e = e_attr.astype(cfg.dtype) @ params["embed_e"]
+    for lw in params["layers"]:
+        h_src = jnp.take(h, g.edge_src, axis=0)
+        h_dst = jnp.take(h, g.edge_dst, axis=0)
+        e_new = h_dst @ lw["A"] + h_src @ lw["B"] + e @ lw["C"]
+        eta = jax.nn.sigmoid(e_new)
+        num = segment_agg(eta * (h_src @ lw["V"]), g.edge_dst, g.edge_mask, n, "sum")
+        den = segment_agg(eta, g.edge_dst, g.edge_mask, n, "sum")
+        h_new = h @ lw["U"] + num / (den + 1e-6)
+        h = h + jax.nn.relu(_norm(h_new, lw["ln_h"]))
+        e = e + jax.nn.relu(_norm(e_new, lw["ln_e"]))
+    return h @ params["readout"]
+
+
+def loss_fn(cfg: GatedGCNConfig, params, g: GraphBatch):
+    logits = forward(cfg, params, g)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, g.y[:, None], axis=-1)[:, 0]
+    return -jnp.sum(jnp.where(g.node_mask, ll, 0.0)) / jnp.maximum(jnp.sum(g.node_mask), 1)
+
+
+# ---------------------------------------------------------------------------
+# dst-local distributed forward (hillclimbed variant, EXPERIMENTS.md §Perf)
+#
+# The naive SPMD lowering of segment_sum materializes a FULL dense [n, d]
+# partial per device and all-reduces it (measured: 33x 2.17GB all-reduces and
+# ~1.6TB/dev HBM churn on ogb_products). With the dst-local edge layout
+# (graph/partition.py) each shard aggregates ONLY its own n/P destination
+# rows; the single cross-shard exchange per layer is an all-gather of the
+# node stream (and its reduce-scatter adjoint in backward).
+# ---------------------------------------------------------------------------
+
+def make_dstlocal_loss(cfg: GatedGCNConfig, mesh, data_axes=("data",)):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = data_axes[0] if len(data_axes) == 1 else data_axes
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+
+    def local_loss(params, x, e_attr, src, dst, emask, nmask, y):
+        # local shards: x [n/P, d_in]; src/dst GLOBAL vertex ids [m/P]
+        n_local = x.shape[0]
+        idx = jax.lax.axis_index(data_axes[0]) if len(data_axes) == 1 else (
+            jax.lax.axis_index(data_axes[0]) * mesh.shape[data_axes[1]]
+            + jax.lax.axis_index(data_axes[1])
+        )
+        offset = idx * n_local
+        h = x.astype(cfg.dtype) @ params["embed_x"]
+        e = e_attr.astype(cfg.dtype) @ params["embed_e"]
+        dst_local = jnp.clip(dst - offset, 0, n_local - 1)
+
+        def layer(h, e, lw):
+            # H8: gather/exchange the node stream in bf16 (halves AG wire
+            # bytes + gather traffic); accumulate locally in model dtype
+            h_full = jax.lax.all_gather(
+                h.astype(jnp.bfloat16), axis, axis=0, tiled=True
+            )  # [n, d] bf16
+            h_src = jnp.take(h_full, src, axis=0).astype(cfg.dtype)
+            h_dst = jnp.take(h_full, dst, axis=0).astype(cfg.dtype)
+            e_new = h_dst @ lw["A"] + h_src @ lw["B"] + e @ lw["C"]
+            eta = jax.nn.sigmoid(e_new)
+            m = jnp.where(emask[:, None], eta * (h_src @ lw["V"]), 0.0)
+            num = jax.ops.segment_sum(m, dst_local, num_segments=n_local)
+            den = jax.ops.segment_sum(
+                jnp.where(emask[:, None], eta, 0.0), dst_local, num_segments=n_local
+            )
+            h2 = h + jax.nn.relu(_norm(h @ lw["U"] + num / (den + 1e-6), lw["ln_h"]))
+            e2 = e + jax.nn.relu(_norm(e_new, lw["ln_e"]))
+            return h2, e2
+
+        # H7 (refuted, reverted): jax.checkpoint per layer did NOT shrink
+        # temp (133GB — the gather-adjoint scatter partials dominate, not the
+        # saved activations) and cost +26% memory-term recompute. Next
+        # iteration identified: custom gather adjoint via dst-local
+        # segment_sum over incoming-edge lists. See EXPERIMENTS.md §Perf.
+        for lw in params["layers"]:
+            h, e = layer(h, e, lw)
+        logits = h @ params["readout"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        loss_sum = jnp.sum(jnp.where(nmask, ll, 0.0))
+        cnt = jnp.sum(nmask)
+        total = jax.lax.psum(loss_sum, axis)
+        count = jax.lax.psum(cnt, axis)
+        return -total / jnp.maximum(count, 1)
+
+    lead = data_axes if len(data_axes) > 1 else data_axes[0]
+    fn = shard_map(
+        local_loss,
+        mesh=mesh,
+        in_specs=(
+            P(),  # params replicated (spec prefix broadcasts over the pytree)
+            P(lead, None), P(lead, None), P(lead), P(lead), P(lead), P(lead), P(lead),
+        ),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+    def loss(params, g: GraphBatch):
+        return fn(params, g.x, g.edge_attr, g.edge_src, g.edge_dst,
+                  g.edge_mask, g.node_mask, g.y)
+
+    return loss

@@ -1,0 +1,52 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) — gcn-cora config: 2L, d=16."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.layers import GraphBatch, gcn_sym_coeff, segment_agg
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    dtype: object = jnp.float32
+
+
+def init_params(cfg: GCNConfig, key):
+    sizes = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    return [
+        {"w": (jax.random.normal(k, (i, o)) / jnp.sqrt(i)).astype(cfg.dtype)}
+        for k, i, o in zip(keys, sizes[:-1], sizes[1:])
+    ]
+
+
+def forward(cfg: GCNConfig, params, g: GraphBatch) -> jnp.ndarray:
+    n = g.x.shape[0]
+    coeff = gcn_sym_coeff(g.edge_src, g.edge_dst, g.edge_mask, n)
+    x = g.x.astype(cfg.dtype)
+    for i, layer in enumerate(params):
+        h = x @ layer["w"]
+        msg = jnp.take(h, g.edge_src, axis=0) * coeff[:, None]
+        agg = segment_agg(msg, g.edge_dst, g.edge_mask, n, "sum")
+        # self loop with 1/(deg+1) weight folded into sym coeff approximation
+        x = agg + h
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x  # [n, n_classes] logits
+
+
+def loss_fn(cfg: GCNConfig, params, g: GraphBatch) -> jnp.ndarray:
+    logits = forward(cfg, params, g)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    labels = g.y
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = g.node_mask
+    return -jnp.sum(jnp.where(mask, ll, 0.0)) / jnp.maximum(jnp.sum(mask), 1)

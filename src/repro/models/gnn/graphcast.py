@@ -1,0 +1,101 @@
+"""GraphCast-style encoder-processor-decoder mesh GNN (arXiv:2212.12794).
+
+Assigned config: 16 processor layers, d_hidden=512, sum aggregator,
+n_vars=227, mesh_refinement=6 (-> 40962 mesh nodes on the real icosahedral
+mesh; the shape cells parameterize grid size directly).
+
+Three node/edge sets:
+  grid nodes (n_g, 227 vars) --g2m--> mesh nodes (n_m) : encoder
+  mesh nodes --mesh edges--> mesh nodes x16            : processor
+  mesh nodes --m2g--> grid nodes                       : decoder -> 227 vars
+
+Every block is an edge-MLP message + sum segment aggregate + node-MLP update
+with residuals (MeshGraphNet recipe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.layers import mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    n_vars: int = 227
+    mesh_refinement: int = 6
+    dtype: object = jnp.bfloat16
+
+
+class MeshBatch(NamedTuple):
+    """Static-shape weather state + mesh topology."""
+
+    grid_x: jnp.ndarray      # f32[n_g, n_vars]
+    g2m_src: jnp.ndarray     # int32[m_g2m] grid ids
+    g2m_dst: jnp.ndarray     # int32[m_g2m] mesh ids
+    mesh_src: jnp.ndarray    # int32[m_mesh]
+    mesh_dst: jnp.ndarray    # int32[m_mesh]
+    m2g_src: jnp.ndarray     # int32[m_m2g] mesh ids
+    m2g_dst: jnp.ndarray     # int32[m_m2g] grid ids
+    target: jnp.ndarray      # f32[n_g, n_vars]
+
+
+def init_params(cfg: GraphCastConfig, key):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 6 + 2 * cfg.n_layers)
+    params = {
+        "grid_enc": mlp_init(ks[0], [cfg.n_vars, d, d], cfg.dtype),
+        "g2m_edge": mlp_init(ks[1], [2 * d, d, d], cfg.dtype),
+        "g2m_node": mlp_init(ks[2], [2 * d, d, d], cfg.dtype),
+        "m2g_edge": mlp_init(ks[3], [2 * d, d, d], cfg.dtype),
+        "m2g_node": mlp_init(ks[4], [2 * d, d, cfg.n_vars], cfg.dtype),
+        "proc": [],
+    }
+    for l in range(cfg.n_layers):
+        params["proc"].append(
+            {
+                "edge": mlp_init(ks[5 + 2 * l], [2 * d, d, d], cfg.dtype),
+                "node": mlp_init(ks[6 + 2 * l], [2 * d, d, d], cfg.dtype),
+            }
+        )
+    return params
+
+
+def _mp(edge_mlp, node_mlp, h_src_nodes, h_dst_nodes, src, dst, n_dst):
+    """One message-passing block: edge MLP on (src, dst) pairs -> sum agg ->
+    node MLP on (node, agg) -> residual."""
+    hs = jnp.take(h_src_nodes, src, axis=0)
+    hd = jnp.take(h_dst_nodes, dst, axis=0)
+    msg = mlp_apply(edge_mlp, jnp.concatenate([hs, hd], axis=-1))
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_dst)
+    upd = mlp_apply(node_mlp, jnp.concatenate([h_dst_nodes, agg], axis=-1))
+    return h_dst_nodes + upd
+
+
+def forward(cfg: GraphCastConfig, params, b: MeshBatch, n_mesh: int):
+    n_g = b.grid_x.shape[0]
+    h_g = mlp_apply(params["grid_enc"], b.grid_x.astype(cfg.dtype))
+    h_m = jnp.zeros((n_mesh, cfg.d_hidden), cfg.dtype)
+    # encoder: grid -> mesh
+    h_m = _mp(params["g2m_edge"], params["g2m_node"], h_g, h_m, b.g2m_src, b.g2m_dst, n_mesh)
+    # processor
+    for lw in params["proc"]:
+        h_m = _mp(lw["edge"], lw["node"], h_m, h_m, b.mesh_src, b.mesh_dst, n_mesh)
+    # decoder: mesh -> grid (residual update in physical space)
+    hs = jnp.take(h_m, b.m2g_src, axis=0)
+    hd = jnp.take(h_g, b.m2g_dst, axis=0)
+    msg = mlp_apply(params["m2g_edge"], jnp.concatenate([hs, hd], axis=-1))
+    agg = jax.ops.segment_sum(msg, b.m2g_dst, num_segments=n_g)
+    delta = mlp_apply(params["m2g_node"], jnp.concatenate([h_g, agg], axis=-1))
+    return b.grid_x + delta.astype(b.grid_x.dtype)
+
+
+def loss_fn(cfg: GraphCastConfig, params, b: MeshBatch, n_mesh: int):
+    pred = forward(cfg, params, b, n_mesh)
+    return jnp.mean((pred - b.target) ** 2)

@@ -1,0 +1,3 @@
+from repro.models.recsys import xdeepfm
+
+__all__ = ["xdeepfm"]

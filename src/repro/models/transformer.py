@@ -1,0 +1,620 @@
+"""Decoder-only transformer LM family (pure functional JAX).
+
+Covers all five assigned LM architectures through one config:
+  * dense GQA (granite-3-2b, deepseek-7b)
+  * GQA + sliding-window attention (h2o-danube-1.8b)
+  * MoE with shared experts (granite-moe-1b-a400m, deepseek-v2-lite-16b)
+  * MLA multi-head latent attention with compressed KV cache
+    (deepseek-v2-lite-16b)
+
+Design:
+  * params are a pytree of jnp arrays; layer weights are stacked [L, ...]
+    and the layer stack runs under jax.lax.scan (bounds HLO size and compile
+    time at 24-40 layers) with optional jax.checkpoint remat.
+  * sharding is expressed as a parallel pytree of PartitionSpec from
+    param_pspecs() (Megatron TP layout) + with_sharding_constraint hooks on
+    activations (sequence sharding on residuals); launch/ wires the mesh.
+  * decode path keeps a KV cache: [B, Hkv, T, Dh] for GQA, or the MLA
+    compressed cache [B, T, kv_lora + rope_dim].
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 1024  # tokens per dispatch group (GShard grouping):
+    #                         keeps the [G, Tg, E, cap] dispatch tensor linear
+    #                         in T instead of quadratic
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    rope_theta: float = 10000.0
+    window: Optional[int] = None          # sliding-window attention
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_impl: str = "naive"   # naive | chunked | chunked_skip
+    chunk_q: int = 512
+    chunk_k: int = 1024
+    logical_batch_axes: Tuple[str, ...] = ("pod", "data")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND model-FLOPs accounting)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        hd = self.head_dim
+        if self.mla is not None:
+            m = self.mla
+            qk = m.qk_nope_dim + m.qk_rope_dim
+            attn = (
+                d * self.n_heads * qk                       # q proj
+                + d * (m.kv_lora + m.qk_rope_dim)           # compressed kv + shared rope
+                + m.kv_lora * self.n_heads * (m.qk_nope_dim + m.v_dim)
+                + self.n_heads * m.v_dim * d                # o proj
+            )
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.moe is not None:
+            mo = self.moe
+            ffn = mo.n_experts * 3 * d * mo.d_ff_expert + d * mo.n_experts
+            ffn += mo.n_shared * 3 * d * mo.d_ff_shared
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return L * per_layer + V * d + d  # embed (tied logits) + final norm
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        mo = self.moe
+        full = self.param_count()
+        all_experts = L * mo.n_experts * 3 * d * mo.d_ff_expert
+        active = L * mo.top_k * 3 * d * mo.d_ff_expert
+        return full - all_experts + active
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    keys = jax.random.split(key, 2)
+    L = cfg.n_layers
+    dt = cfg.dtype
+    _counter = [0]
+
+    def stack(fn):
+        """init one leaf per layer, stacked on axis 0 (fresh keys per leaf)."""
+        _counter[0] += 1
+        ks = jax.random.split(jax.random.fold_in(keys[0], _counter[0]), L)
+        return jax.vmap(fn)(ks)
+
+    layer: Dict[str, Any] = {}
+    if cfg.mla is None:
+        layer["wq"] = stack(lambda k: _dense(k, (d, cfg.n_heads * hd), dt))
+        layer["wk"] = stack(lambda k: _dense(k, (d, cfg.n_kv_heads * hd), dt))
+        layer["wv"] = stack(lambda k: _dense(k, (d, cfg.n_kv_heads * hd), dt))
+        layer["wo"] = stack(lambda k: _dense(k, (cfg.n_heads * hd, d), dt))
+    else:
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        layer["wq"] = stack(lambda k: _dense(k, (d, cfg.n_heads * qk), dt))
+        layer["w_dkv"] = stack(lambda k: _dense(k, (d, m.kv_lora), dt))
+        layer["w_krope"] = stack(lambda k: _dense(k, (d, m.qk_rope_dim), dt))
+        layer["w_uk"] = stack(lambda k: _dense(k, (m.kv_lora, cfg.n_heads * m.qk_nope_dim), dt))
+        layer["w_uv"] = stack(lambda k: _dense(k, (m.kv_lora, cfg.n_heads * m.v_dim), dt))
+        layer["wo"] = stack(lambda k: _dense(k, (cfg.n_heads * m.v_dim, d), dt))
+
+    if cfg.moe is None:
+        layer["w_in"] = stack(lambda k: _dense(k, (d, cfg.d_ff), dt))
+        layer["w_gate"] = stack(lambda k: _dense(k, (d, cfg.d_ff), dt))
+        layer["w_out"] = stack(lambda k: _dense(k, (cfg.d_ff, d), dt))
+    else:
+        mo = cfg.moe
+        layer["router"] = stack(lambda k: _dense(k, (d, mo.n_experts), jnp.float32))
+        layer["e_in"] = stack(lambda k: _dense(k, (mo.n_experts, d, mo.d_ff_expert), dt))
+        layer["e_gate"] = stack(lambda k: _dense(k, (mo.n_experts, d, mo.d_ff_expert), dt))
+        layer["e_out"] = stack(lambda k: _dense(k, (mo.n_experts, mo.d_ff_expert, d), dt))
+        if mo.n_shared:
+            dsh = mo.d_ff_shared or mo.d_ff_expert
+            layer["s_in"] = stack(lambda k: _dense(k, (d, mo.n_shared * dsh), dt))
+            layer["s_gate"] = stack(lambda k: _dense(k, (d, mo.n_shared * dsh), dt))
+            layer["s_out"] = stack(lambda k: _dense(k, (mo.n_shared * dsh, d), dt))
+
+    layer["ln1"] = jnp.ones((L, d), dtype=jnp.float32)
+    layer["ln2"] = jnp.ones((L, d), dtype=jnp.float32)
+
+    return {
+        "embed": _dense(keys[1], (cfg.vocab, d), dt, scale=0.02),
+        "final_ln": jnp.ones((d,), dtype=jnp.float32),
+        "layers": layer,
+    }
+
+
+def param_pspecs(cfg: LMConfig, model_axis: str = "model") -> Dict[str, Any]:
+    """Megatron TP layout: column-shard in-projections, row-shard
+    out-projections; experts sharded over the model axis (EP); embedding
+    vocab-sharded."""
+    M = model_axis
+    layer: Dict[str, Any] = {}
+    if cfg.mla is None:
+        layer["wq"] = P(None, None, M)
+        layer["wk"] = P(None, None, M)
+        layer["wv"] = P(None, None, M)
+        layer["wo"] = P(None, M, None)
+    else:
+        layer["wq"] = P(None, None, M)
+        layer["w_dkv"] = P(None, None, None)   # latent projection replicated
+        layer["w_krope"] = P(None, None, None)
+        layer["w_uk"] = P(None, None, M)
+        layer["w_uv"] = P(None, None, M)
+        layer["wo"] = P(None, M, None)
+    if cfg.moe is None:
+        layer["w_in"] = P(None, None, M)
+        layer["w_gate"] = P(None, None, M)
+        layer["w_out"] = P(None, M, None)
+    else:
+        layer["router"] = P(None, None, None)
+        layer["e_in"] = P(None, M, None, None)    # EP: experts over model axis
+        layer["e_gate"] = P(None, M, None, None)
+        layer["e_out"] = P(None, M, None, None)
+        if cfg.moe.n_shared:
+            layer["s_in"] = P(None, None, M)
+            layer["s_gate"] = P(None, None, M)
+            layer["s_out"] = P(None, M, None)
+    layer["ln1"] = P(None, None)
+    layer["ln2"] = P(None, None)
+    return {
+        "embed": P(M, None),
+        "final_ln": P(None),
+        "layers": layer,
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, D] rotary over last dim; pos: [S] absolute positions."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+def _attention_scores(
+    q, k, v, *, causal: bool, window: Optional[int], t_total: int,
+    impl: str = "naive", chunk_q: int = 512, chunk_k: int = 1024,
+):
+    """q: [B, Hq, S, Dh], k/v: [B, Hkv, T, Dh] -> [B, Hq, S, Dh].
+    Right-aligned positions (decode: S==1, T==cache).
+
+    impl='naive'        materializes [.., S, T] logits — fine for short S.
+    impl='chunked'      flash-style online softmax over (q, k) chunks; HBM
+                        footprint O(S*chunk_k) instead of O(S*T). This is the
+                        XLA mirror of kernels/flash_attention (the TPU dry-run
+                        path; the Pallas kernel is the hardware hot path).
+    impl='chunked_skip' chunked + static skip of fully-masked k chunks
+                        (causal upper triangle / outside the SWA window):
+                        halves causal FLOPs, bounds SWA cost by the window.
+    """
+    B, Hq, S, Dh = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    q = q.reshape(B, Hkv, rep, S, Dh)
+    scale = 1.0 / np.sqrt(Dh)
+    offset = t_total - S
+
+    if impl == "naive":
+        logits = jnp.einsum("bkrsd,bktd->bkrst", q, k).astype(jnp.float32) * scale
+        qpos = jnp.arange(S) + offset
+        kpos = jnp.arange(T)
+        mask = jnp.ones((S, T), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkrst,bktd->bkrsd", probs, v)
+        return out.reshape(B, Hq, S, v.shape[-1])
+
+    cq = min(chunk_q, S)
+    ck = min(chunk_k, T)
+    n_q, n_k = S // cq, T // ck
+    assert S % cq == 0 and T % ck == 0, (S, T, cq, ck)
+    Dv = v.shape[-1]
+
+    def q_chunk(qi: int, q_blk):
+        """online softmax across this q chunk's k range."""
+        q_lo = qi * cq + offset
+        q_hi = q_lo + cq - 1
+        if impl == "chunked_skip":
+            k_hi = n_k if not causal else min(n_k, (q_hi // ck) + 1)
+            k_lo = 0 if window is None else max(0, (q_lo - window + 1) // ck)
+        else:
+            k_lo, k_hi = 0, n_k
+        m = jnp.full((B, Hkv, rep, cq, 1), -1e30, jnp.float32)
+        l = jnp.zeros((B, Hkv, rep, cq, 1), jnp.float32)
+        acc = jnp.zeros((B, Hkv, rep, cq, Dv), jnp.float32)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=2)
+            logits = jnp.einsum("bkrsd,bktd->bkrst", q_blk, k_blk).astype(jnp.float32) * scale
+            qpos = jnp.arange(cq) + q_lo
+            kpos = jnp.arange(ck) + ki * ck
+            mask = jnp.ones((cq, ck), dtype=bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > (qpos[:, None] - window)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_cur = jnp.max(logits, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            dead = m_new <= -1e29
+            p = jnp.exp(logits - jnp.where(dead, 0.0, m_new))
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.where(m <= -1e29, 0.0, jnp.exp(m - jnp.where(dead, 0.0, m_new)))
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bkrst,bktd->bkrsd", p.astype(v.dtype), v_blk)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m, l, acc), jnp.arange(k_lo, k_hi)
+        )
+        return acc / jnp.maximum(l, 1e-30)
+
+    outs = []
+    for qi in range(n_q):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, axis=3)
+        outs.append(q_chunk(qi, q_blk))
+    out = jnp.concatenate(outs, axis=3).astype(v.dtype)
+    return out.reshape(B, Hq, S, Dv)
+
+
+def _moe_ffn(x, lw, cfg: LMConfig):
+    """Grouped capacity-based one-hot dispatch MoE (GShard-style; EP over the
+    model axis). x: [B, S, d] -> [B, S, d] plus aux load-balance loss.
+
+    Tokens are split into dispatch groups of `group_size`; each group routes
+    independently with capacity ceil(Tg * k / E * cf), so the dispatch tensor
+    [G, Tg, E, cap] grows linearly with token count."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    g_sz = min(mo.group_size, T)
+    assert T % g_sz == 0, (T, g_sz)
+    G = T // g_sz
+    E, K = mo.n_experts, mo.top_k
+    cap = int(np.ceil(g_sz * K / E * mo.capacity_factor))
+
+    xt = x.reshape(G, g_sz, d)
+    logits = (xt.astype(jnp.float32) @ lw["router"].astype(jnp.float32))  # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # [G, Tg, K]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)          # [G, Tg, K, E]
+    flat = onehot.reshape(G, g_sz * K, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                      # [G, Tg*K, E]
+    pos = pos.reshape(G, g_sz, K, E)
+    pos_tk = jnp.take_along_axis(pos, gate_idx[..., None], axis=3)[..., 0]   # [G, Tg, K]
+    within = (pos_tk >= 0) & (pos_tk < cap)
+    safe_pos = jnp.clip(pos_tk, 0, cap - 1)
+
+    disp = jnp.zeros((G, g_sz, E, cap), dtype=x.dtype)
+    gidx = jnp.arange(G)[:, None, None] * jnp.ones((1, g_sz, K), jnp.int32)
+    tidx = jnp.arange(g_sz)[None, :, None] * jnp.ones((G, 1, K), jnp.int32)
+    disp = disp.at[
+        gidx.reshape(-1), tidx.reshape(-1), gate_idx.reshape(-1), safe_pos.reshape(-1)
+    ].max(within.astype(x.dtype).reshape(-1))
+
+    # expert compute (e sharded over the model axis = EP)
+    xs = jnp.einsum("gtec,gtd->gecd", disp, xt)
+    h = jnp.einsum("gecd,edf->gecf", xs, lw["e_in"])
+    g = jnp.einsum("gecd,edf->gecf", xs, lw["e_gate"])
+    h = jax.nn.silu(g) * h
+    ys = jnp.einsum("gecf,efd->gecd", h, lw["e_out"])  # [G, E, cap, d]
+
+    gate_per_slot = jnp.einsum("gtk,gtke->gte", gate_vals, onehot.astype(gate_vals.dtype))
+    comb = disp * gate_per_slot[..., None].astype(x.dtype)
+    out = jnp.einsum("gtec,gecd->gtd", comb, ys)
+
+    if mo.n_shared:
+        hs = jax.nn.silu(xt @ lw["s_gate"]) * (xt @ lw["s_in"])
+        out = out + hs @ lw["s_out"]
+
+    # load-balance aux loss (Switch style)
+    density = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * router_prob)
+    return out.reshape(B, S, d), aux
+
+
+def _dense_ffn(x, lw):
+    h = jax.nn.silu(x @ lw["w_gate"]) * (x @ lw["w_in"])
+    return h @ lw["w_out"]
+
+
+def _layer(cfg: LMConfig, lw, x, pos):
+    """One transformer block (training path, full sequence)."""
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    h = rms_norm(x, lw["ln1"], cfg.norm_eps)
+    if cfg.mla is None:
+        q = (h @ lw["wq"]).reshape(B, S, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = (h @ lw["wk"]).reshape(B, S, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = (h @ lw["wv"]).reshape(B, S, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        attn = _attention_scores(
+            q, k, v, causal=True, window=cfg.window, t_total=S,
+            impl=cfg.attn_impl, chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+        )
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * hd)
+    else:
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        q = (h @ lw["wq"]).reshape(B, S, cfg.n_heads, qk).transpose(0, 2, 1, 3)
+        q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+        q_rope = rope(q_rope, pos, cfg.rope_theta)
+        c_kv = h @ lw["w_dkv"]                                     # [B, S, kv_lora]
+        k_rope = rope(
+            (h @ lw["w_krope"])[:, None, :, :], pos, cfg.rope_theta
+        )                                                          # [B, 1, S, rope]
+        k_nope = (c_kv @ lw["w_uk"]).reshape(B, S, cfg.n_heads, m.qk_nope_dim).transpose(0, 2, 1, 3)
+        vproj = (c_kv @ lw["w_uv"]).reshape(B, S, cfg.n_heads, m.v_dim).transpose(0, 2, 1, 3)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, cfg.n_heads, S, m.qk_rope_dim))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        attn = _attention_scores(
+            q_full, k_full, vproj, causal=True, window=cfg.window, t_total=S,
+            impl=cfg.attn_impl, chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+        )
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * m.v_dim)
+    x = x + attn @ lw["wo"]
+
+    h = rms_norm(x, lw["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        x = x + _dense_ffn(h, lw)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        y, aux = _moe_ffn(h, lw, cfg)
+        x = x + y
+    return x, aux
+
+
+def forward(cfg: LMConfig, params, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: int32[B, S] -> (logits f32[B, S, V], aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]  # [B, S, d]
+    pos = jnp.arange(S)
+
+    def body(carry, lw):
+        x = carry
+        fn = _layer
+        if cfg.remat:
+            fn = jax.checkpoint(_layer, static_argnums=(0,))
+        x, aux = fn(cfg, lw, x, pos)
+        return x, aux
+
+    x, auxes = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, jnp.sum(auxes)
+
+
+def lm_loss(cfg: LMConfig, params, batch) -> jnp.ndarray:
+    """batch: {tokens int32[B, S], labels int32[B, S]} next-token CE."""
+    logits, aux = forward(cfg, params, batch["tokens"])
+    V = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch["labels"] >= 0
+    ce = -jnp.sum(jnp.where(mask, ll, 0.0)) / jnp.maximum(jnp.sum(mask), 1)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# decode / serve path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Dict[str, jnp.ndarray]:
+    hd = cfg.head_dim
+    if cfg.mla is None:
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd), cfg.dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd), cfg.dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((cfg.n_layers, batch, max_len, m.kv_lora), cfg.dtype),
+        "k_rope": jnp.zeros((cfg.n_layers, batch, max_len, m.qk_rope_dim), cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_pspecs(cfg: LMConfig, model_axis: str = "model", data_axes=("pod", "data")):
+    if cfg.mla is None:
+        return {
+            "k": P(None, data_axes, model_axis, None, None),
+            "v": P(None, data_axes, model_axis, None, None),
+            "pos": P(),
+        }
+    return {
+        "c_kv": P(None, data_axes, None, None),
+        "k_rope": P(None, data_axes, None, None),
+        "pos": P(),
+    }
+
+
+def _decode_layer(cfg: LMConfig, lw, x, cache_l, pos_scalar, t_total: int):
+    """One block for a single new token. x: [B, 1, d]."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    h = rms_norm(x, lw["ln1"], cfg.norm_eps)
+    pos = pos_scalar[None]
+    if cfg.mla is None:
+        q = (h @ lw["wq"]).reshape(B, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k_new = (h @ lw["wk"]).reshape(B, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v_new = (h @ lw["wv"]).reshape(B, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
+        k = jax.lax.dynamic_update_slice(cache_l["k"], k_new, (0, 0, pos_scalar, 0))
+        v = jax.lax.dynamic_update_slice(cache_l["v"], v_new, (0, 0, pos_scalar, 0))
+        if cfg.window is not None and cfg.window < t_total:
+            # SWA: only the last `window` cache entries participate (sub-
+            # quadratic long-context decode; the ring indexing keeps the
+            # attention cost O(window))
+            start = jnp.maximum(pos_scalar - cfg.window + 1, 0)
+            kw = jax.lax.dynamic_slice(
+                k, (0, 0, start, 0), (B, cfg.n_kv_heads, cfg.window, hd)
+            )
+            vw = jax.lax.dynamic_slice(
+                v, (0, 0, start, 0), (B, cfg.n_kv_heads, cfg.window, hd)
+            )
+            valid = jnp.arange(cfg.window) <= (pos_scalar - start)
+            attn = _masked_decode_attn(q, kw, vw, valid)
+        else:
+            valid = jnp.arange(k.shape[2]) <= pos_scalar
+            attn = _masked_decode_attn(q, k, v, valid)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * hd)
+        new_cache = {"k": k, "v": v}
+    else:
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        q = (h @ lw["wq"]).reshape(B, 1, cfg.n_heads, qk).transpose(0, 2, 1, 3)
+        q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+        q_rope = rope(q_rope, pos, cfg.rope_theta)
+        c_new = h @ lw["w_dkv"]                             # [B, 1, kv_lora]
+        kr_new = rope((h @ lw["w_krope"]), pos, cfg.rope_theta)
+        c_kv = jax.lax.dynamic_update_slice(cache_l["c_kv"], c_new, (0, pos_scalar, 0))
+        k_rope = jax.lax.dynamic_update_slice(cache_l["k_rope"], kr_new, (0, pos_scalar, 0))
+        # latent-space attention (absorbed projections): score = q_nope^T W_uk c
+        # fold W_uk into q: q_lat [B, H, 1, kv_lora]
+        w_uk = lw["w_uk"].reshape(m.kv_lora, cfg.n_heads, m.qk_nope_dim)
+        q_lat = jnp.einsum("bhsd,khd->bhsk", q_nope, w_uk)
+        logits = jnp.einsum("bhsk,btk->bhst", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32))
+        logits += jnp.einsum(
+            "bhsd,btd->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+        )
+        logits *= 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+        valid = jnp.arange(c_kv.shape[1]) <= pos_scalar
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhst,btk->bhsk", probs, c_kv.astype(jnp.float32))  # latent ctx
+        w_uv = lw["w_uv"].reshape(m.kv_lora, cfg.n_heads, m.v_dim)
+        attn = jnp.einsum("bhsk,khd->bhsd", ctx, w_uv).astype(x.dtype)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * m.v_dim)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    x = x + attn @ lw["wo"]
+    h = rms_norm(x, lw["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        x = x + _dense_ffn(h, lw)
+    else:
+        y, _ = _moe_ffn(h, lw, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def _masked_decode_attn(q, k, v, valid):
+    """q: [B, Hq, 1, D], k/v: [B, Hkv, T, D], valid: bool[T]."""
+    B, Hq, S, Dh = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    q = q.reshape(B, Hkv, rep, S, Dh)
+    logits = jnp.einsum("bkrsd,bktd->bkrst", q, k).astype(jnp.float32) / np.sqrt(Dh)
+    logits = jnp.where(valid[None, None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,bktd->bkrsd", probs, v)
+    return out.reshape(B, Hq, S, Dh)
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens: jnp.ndarray):
+    """One-token decode. tokens: int32[B, 1]. Returns (logits [B, 1, V], cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos_scalar = cache["pos"]
+    t_total = cache["k"].shape[3] if cfg.mla is None else cache["c_kv"].shape[2]
+
+    def body(x, inputs):
+        lw, cache_l = inputs
+        fn = _decode_layer
+        x, new_c = fn(cfg, lw, x, cache_l, pos_scalar, t_total)
+        return x, new_c
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches))
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    new_cache = dict(new_caches)
+    new_cache["pos"] = pos_scalar + 1
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Prefill = full forward over the prompt; returns last-position logits.
+    (The dry-run lowers this as the prefill serve step.)"""
+    logits, _ = forward(cfg, params, tokens)
+    return logits[:, -1:, :]

@@ -1,0 +1,10 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import quantized_psum_grads
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "quantized_psum_grads",
+]

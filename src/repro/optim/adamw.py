@@ -1,0 +1,76 @@
+"""AdamW with fp32 master state over (possibly bf16) params, global-norm
+clipping, and warmup+cosine schedule. Pure pytree functions (no optax dep)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any       # fp32 first moment (same tree as params)
+    nu: Any       # fp32 second moment
+    master: Any   # fp32 master copy of params
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    )
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    warm = base_lr * (step + 1) / max(warmup, 1)
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = global_norm(g32)
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+
+    def upd(p32, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+
+    master = jax.tree.map(upd, state.master, mu, nu)
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+    return (
+        new_params,
+        AdamWState(step=step, mu=mu, nu=nu, master=master),
+        {"grad_norm": gnorm, "lr": lr},
+    )

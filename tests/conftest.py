@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — tests must see the real single CPU
+# device; only launch/dryrun.py forces the 512-device placeholder topology
+# (and mesh tests spawn subprocesses that set it themselves).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,138 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp refs (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,La,Lb", [(7, 8, 8), (64, 24, 16), (300, 64, 48), (1, 128, 128)])
+def test_label_intersect_sweep(B, La, Lb, rng):
+    a = rng.integers(0, 60, size=(B, La)).astype(np.int32)
+    b = rng.integers(0, 60, size=(B, Lb)).astype(np.int32)
+    a[rng.random((B, La)) < 0.3] = -1
+    b[rng.random((B, Lb)) < 0.3] = -1
+    out = np.asarray(ops.label_intersect(jnp.asarray(a), jnp.asarray(b), block_b=64))
+    exp = np.asarray(ref.label_intersect_ref(jnp.asarray(a), jnp.asarray(b)))
+    assert (out == exp).all()
+
+
+def test_label_intersect_all_padding(rng):
+    a = np.full((16, 8), -1, np.int32)
+    b = np.full((16, 8), -1, np.int32)
+    out = np.asarray(ops.label_intersect(jnp.asarray(a), jnp.asarray(b), block_b=16))
+    assert not out.any()
+
+
+@pytest.mark.parametrize("n,k,m", [(16, 32, 32), (70, 90, 100), (128, 256, 64)])
+def test_bitset_mm_sweep(n, k, m, rng):
+    wk, wm = (k + 31) // 32, (m + 31) // 32
+    A = rng.integers(0, 2**32, size=(n, wk), dtype=np.uint32)
+    X = rng.integers(0, 2**32, size=(k, wm), dtype=np.uint32)
+    out = np.asarray(ops.bitset_mm(jnp.asarray(A), jnp.asarray(X), block_n=16, block_k=32, block_w=8))
+    exp = np.asarray(ref.bitset_mm_ref(jnp.asarray(A), jnp.asarray(X)))
+    assert (out == exp).all()
+
+
+def test_bitset_mm_is_closure_step():
+    """one OR-matmul step == one step of transitive closure R |= A.R"""
+    from repro.graph.generators import random_dag
+    from repro.graph.reach import transitive_closure_bits
+
+    g = random_dag(64, 160, seed=0)
+    n = g.n
+    words = (n + 31) // 32
+    A = np.zeros((n, words), dtype=np.uint32)
+    src, dst = g.edges()
+    for s, d in zip(src, dst):
+        A[s, d >> 5] |= np.uint32(1) << np.uint32(d & 31)
+    R = A.copy()
+    for _ in range(n.bit_length() + 1):  # repeated squaring-ish iteration
+        step = np.asarray(ops.bitset_mm(jnp.asarray(R), jnp.asarray(R)))
+        new = R | step
+        if (new == R).all():
+            break
+        R = new
+    assert (R == transitive_closure_bits(g)).all()
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,T,D,causal,window",
+    [
+        (1, 2, 2, 128, 128, 32, True, None),
+        (2, 4, 2, 256, 256, 64, True, None),      # GQA
+        (1, 4, 1, 128, 128, 64, True, 48),        # MQA + SWA
+        (2, 2, 2, 1, 256, 32, True, None),        # decode
+        (1, 2, 2, 128, 256, 32, True, None),      # chunked prefill (S < T)
+        (1, 2, 2, 128, 128, 32, False, None),     # bidirectional
+    ],
+)
+def test_flash_attention_sweep(B, Hq, Hkv, S, T, D, causal, window, rng):
+    q = rng.standard_normal((B, Hq, S, D)).astype(np.float32)
+    k = rng.standard_normal((B, Hkv, T, D)).astype(np.float32)
+    v = rng.standard_normal((B, Hkv, T, D)).astype(np.float32)
+    out = np.asarray(
+        ops.flash_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            causal=causal, window=window, block_q=64, block_k=64,
+        )
+    )
+    exp = np.asarray(
+        ref.flash_attention_ref(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal, window=window
+        )
+    )
+    np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(3)
+    q = rng.standard_normal((1, 2, 128, 64)).astype(np.float32)
+    k = rng.standard_normal((1, 2, 128, 64)).astype(np.float32)
+    v = rng.standard_normal((1, 2, 128, 64)).astype(np.float32)
+    qb, kb, vb = (jnp.asarray(x, dtype=jnp.bfloat16) for x in (q, k, v))
+    out = np.asarray(ops.flash_attention(qb, kb, vb, causal=True).astype(jnp.float32))
+    exp = np.asarray(
+        ref.flash_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True)
+    )
+    np.testing.assert_allclose(out, exp, rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("n,d,ns,F", [(32, 4, 50, 8), (96, 7, 200, 32), (64, 1, 64, 128)])
+def test_ell_spmm_sweep(n, d, ns, F, rng):
+    nbr = rng.integers(0, ns, size=(n, d)).astype(np.int32)
+    nbr[rng.random((n, d)) < 0.3] = -1
+    wgt = rng.standard_normal((n, d)).astype(np.float32)
+    x = rng.standard_normal((ns, F)).astype(np.float32)
+    out = np.asarray(ops.ell_spmm(jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(x), block_n=32))
+    exp = np.asarray(ref.ell_spmm_ref(jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(x)))
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("V,D,B,bag", [(100, 8, 32, 4), (500, 16, 64, 9), (64, 32, 16, 1)])
+def test_embedding_bag_sweep(V, D, B, bag, rng):
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    idx = rng.integers(0, V, size=(B, bag)).astype(np.int32)
+    idx[rng.random((B, bag)) < 0.25] = -1
+    out = np.asarray(ops.embedding_bag(jnp.asarray(table), jnp.asarray(idx), block_b=16))
+    exp = np.asarray(
+        ref.embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx), jnp.asarray(idx >= 0))
+    )
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_serve_step_kernel_path_matches():
+    """the oracle serve engine with use_kernel=True equals the jnp path."""
+    from repro.core.distribution import distribution_labeling
+    from repro.core.query import serve_step
+    from repro.graph.generators import random_dag
+
+    g = random_dag(120, 320, seed=1)
+    o = distribution_labeling(g)
+    lo, li = o.device_labels()
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(0, g.n, size=(257, 2)).astype(np.int32))
+    a = np.asarray(serve_step(lo, li, q, use_kernel=False))
+    b = np.asarray(serve_step(lo, li, q, use_kernel=True))
+    assert (a == b).all()

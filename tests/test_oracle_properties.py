@@ -1,0 +1,124 @@
+"""Property-based tests of the paper's core invariants (hypothesis).
+
+  * Completeness (Theorems 1 & 3): for any DAG, u->v iff
+    L_out(u) cap L_in(v) != empty — for BOTH labeling algorithms.
+  * Non-redundancy of Distribution-Labeling (Theorem 4): removing any single
+    hop from any label breaks completeness.
+  * Host DL == device DL (the distributed formulation is exact).
+  * Label size sanity: DL <= HL on average (the paper's empirical finding).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distribution import distribution_labeling
+from repro.core.distribution_jax import distribution_labeling_jax
+from repro.core.hierarchy import hierarchical_labeling
+from repro.core.oracle import ReachabilityOracle
+from repro.graph.csr import from_edges, is_dag
+from repro.graph.generators import layered_dag, random_dag, tree_dag
+from repro.graph.reach import reaches_bit, transitive_closure_bits
+
+
+@st.composite
+def small_dags(draw):
+    n = draw(st.integers(8, 40))
+    m = draw(st.integers(n // 2, 3 * n))
+    seed = draw(st.integers(0, 10_000))
+    return random_dag(n, m, seed=seed)
+
+
+def _assert_complete(g, oracle: ReachabilityOracle, name: str):
+    tc = transitive_closure_bits(g)
+    for u in range(g.n):
+        for v in range(g.n):
+            if u == v:
+                continue
+            truth = reaches_bit(tc, u, v)
+            pred = oracle.query(u, v)
+            assert truth == pred, f"{name}: {u}->{v} truth={truth} pred={pred}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_dags())
+def test_distribution_labeling_complete(g):
+    _assert_complete(g, distribution_labeling(g), "DL")
+
+
+@settings(max_examples=15, deadline=None)
+@given(small_dags())
+def test_hierarchical_labeling_complete(g):
+    _assert_complete(g, hierarchical_labeling(g, core_max=8), "HL")
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_dags())
+def test_device_dl_matches_host(g):
+    host = distribution_labeling(g)
+    dev = distribution_labeling_jax(g, l_max=max(int(host.max_label_len), 8))
+    for v in range(g.n):
+        for h_mat, d_mat in ((host.L_out, dev.L_out), (host.L_in, dev.L_in)):
+            a = set(h_mat[v][h_mat[v] != -1].tolist())
+            b = set(d_mat[v][d_mat[v] != -1].tolist())
+            assert a == b, (v, a, b)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 1000))
+def test_dl_non_redundancy(seed):
+    """Theorem 4: every hop in every DL label is load-bearing."""
+    g = random_dag(18, 36, seed=seed)
+    oracle = distribution_labeling(g)
+    tc = transitive_closure_bits(g)
+
+    def complete_without(mat_name: str, vertex: int, drop: int) -> bool:
+        L_out = oracle.L_out.copy()
+        L_in = oracle.L_in.copy()
+        mat = L_out if mat_name == "out" else L_in
+        row = mat[vertex]
+        row[row == drop] = -1
+        o2 = ReachabilityOracle(L_out, L_in, oracle.out_len, oracle.in_len)
+        # Theorem 4's Cov includes the reflexive pairs: a self-hop's load
+        # may be exactly query(v, v) (answered by label intersection, not a
+        # shortcut), so u == v is part of completeness here.
+        for u in range(g.n):
+            for v in range(g.n):
+                truth = True if u == v else reaches_bit(tc, u, v)
+                if truth != o2.query(u, v):
+                    return False
+        return True
+
+    for v in range(g.n):
+        for hop in oracle.L_out[v][oracle.L_out[v] != -1]:
+            assert not complete_without("out", v, int(hop)), (
+                f"hop {hop} in L_out({v}) is redundant"
+            )
+        for hop in oracle.L_in[v][oracle.L_in[v] != -1]:
+            assert not complete_without("in", v, int(hop)), (
+                f"hop {hop} in L_in({v}) is redundant"
+            )
+
+
+def test_dl_label_size_beats_hl_on_families():
+    """Paper finding (Figures 3/4): DL labels are smaller than HL labels."""
+    wins = 0
+    total = 0
+    for gen, kw in [
+        (random_dag, dict(n=150, m=400)),
+        (layered_dag, dict(n=150, avg_out=2.0)),
+        (tree_dag, dict(n=200, branching=5)),
+    ]:
+        for seed in range(3):
+            g = gen(seed=seed, **kw)
+            dl = distribution_labeling(g).total_label_size
+            hl = hierarchical_labeling(g, core_max=16).total_label_size
+            wins += dl <= hl
+            total += 1
+    assert wins >= total - 1, f"DL larger than HL on {total - wins}/{total} graphs"
+
+
+def test_query_self_reach():
+    g = random_dag(30, 60, seed=5)
+    o = distribution_labeling(g)
+    for v in range(g.n):
+        assert o.query(v, v)

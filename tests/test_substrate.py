@@ -1,0 +1,125 @@
+"""Training substrate: optimizer, checkpointing, fault tolerance, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.data.synth import lm_batch, recsys_batch
+from repro.ft import FaultTolerantLoop, SimulatedFailure
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    opt = adamw_init(params)
+    target = jnp.array([1.0, 1.0, 1.0])
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, opt, _ = adamw_update(g, opt, params, 0.05, weight_decay=0.0)
+        return params, opt, loss
+
+    for _ in range(300):
+        params, opt, loss = step(params, opt)
+    assert float(loss) < 1e-3
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.int32(s), 1.0, warmup=10, total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9]          # warmup rises
+    assert lrs[10] >= lrs[50] >= lrs[99]  # cosine decays
+    assert lrs[99] >= 0.099         # min_frac floor
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(10, dtype=np.float32), "b": {"c": np.ones((3, 4))}}
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    like = {"a": np.zeros(10, np.float32), "b": {"c": np.zeros((3, 4))}}
+    out = restore_checkpoint(str(tmp_path), 5, like)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = {"x": np.zeros(4)}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [4, 5]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": np.zeros(4)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, {"x": np.zeros(5)})
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(7, {"x": np.arange(5)})
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_fault_tolerant_restart(tmp_path):
+    """crash at step 7, restart, final state identical to an uninterrupted run."""
+
+    def make_loop(fail_at):
+        @jax.jit
+        def step(state, batch):
+            return state + jnp.sum(batch), {"s": state}
+
+        return FaultTolerantLoop(
+            step_fn=step,
+            batch_fn=lambda s: jnp.full((4,), float(s)),
+            init_state=jnp.float32(0),
+            ckpt_dir=str(tmp_path / "ft"),
+            ckpt_every=2,
+            fail_at=fail_at,
+        )
+
+    loop = make_loop(fail_at=7)
+    with pytest.raises(SimulatedFailure):
+        loop.run(12)
+    # restart (fresh loop object — as a new process would)
+    loop2 = make_loop(fail_at=None)
+    final = loop2.run(12)
+    expected = float(sum(4 * s for s in range(12)))
+    assert float(final) == expected
+    # resumed from a durable checkpoint (>= step 2). The step-6 save is
+    # ASYNC and may legitimately be lost in-flight when the crash lands —
+    # recovery correctness is the `final == expected` assert above.
+    assert loop2.start_step >= 2
+
+
+def test_data_determinism_and_restart_safety():
+    a = lm_batch(seed=3, step=17, batch=4, seq=16, vocab=101)
+    b = lm_batch(seed=3, step=17, batch=4, seq=16, vocab=101)
+    c = lm_batch(seed=3, step=18, batch=4, seq=16, vocab=101)
+    assert (a["tokens"] == b["tokens"]).all()
+    assert not (a["tokens"] == c["tokens"]).all()
+    r1 = recsys_batch(1, 5, 8, 10, 100)
+    r2 = recsys_batch(1, 5, 8, 10, 100)
+    assert (r1["ids"] == r2["ids"]).all()
+
+
+def test_grad_compression_unbiased_ish():
+    """int8 quantized psum approximates the mean within block-quant error."""
+    from repro.optim.compression import _dequantize_int8, _quantize_int8
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32) * 0.01)
+    q, s = _quantize_int8(x, None)
+    x2 = _dequantize_int8(q, s, x.shape)
+    rel = float(jnp.abs(x2 - x).max() / jnp.abs(x).max())
+    assert rel < 0.02
