@@ -1,13 +1,17 @@
 """Paper Tables 2/3 (small) & 5/6 (large): query time, equal + random loads.
 
-Reports host-side per-query latency for every method, plus the DEVICE
-batched serve path (the oracle's real serving mode) for DL.
+Reports host-side per-query latency for every method, plus the QueryEngine
+batched serve path (the oracle's real serving mode) for DL — swept across
+intersection backends with prefilters + length-bucketed batching enabled.
+
+  PYTHONPATH=src python -m benchmarks.query_time --backend dense,kernel
+  PYTHONPATH=src python -m benchmarks.query_time --backend all
 """
 from __future__ import annotations
 
+import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
@@ -18,14 +22,35 @@ from benchmarks.common import (
     csv_row,
     load_dataset,
 )
-from repro.core.query import serve_step
 from repro.graph.reach import sample_query_workload, transitive_closure_bits
+from repro.serve import QueryEngine, topo_levels
 
 N_QUERIES_HOST = 2000
 N_QUERIES_DEV = 100_000
 
+ENGINE_BACKENDS = ("host", "dense", "kernel")
 
-def _bench_methods(g, queries, methods, ds_tag, out):
+
+def _bench_engine(g, idx, ds_tag, out, backends, n_dev=N_QUERIES_DEV):
+    """Batched engine serving sweep (the production path) for a DL index."""
+    engine = QueryEngine(idx.oracle, level=topo_levels(g), bucketing=True)
+    rng = np.random.default_rng(1)
+    qd = rng.integers(0, g.n, size=(n_dev, 2)).astype(np.int32)
+    for be in backends:
+        # warm with the FULL batch: tier tile shapes depend on batch size, so
+        # a small warmup would leave per-tier compiles inside the timed region
+        engine.query_batch(qd, backend=be)
+        t0 = time.perf_counter()
+        engine.query_batch(qd, backend=be)
+        dt = time.perf_counter() - t0
+        tiers = ";".join(f"w{t['width']}x{t['count']}" for t in engine.last_stats["tiers"])
+        out(csv_row(
+            f"query/{ds_tag}/DL-engine-{be}", dt / n_dev * 1e6,
+            f"batch={n_dev};prefiltered={engine.last_stats['n_prefiltered']};tiers={tiers}",
+        ))
+
+
+def _bench_methods(g, queries, methods, ds_tag, out, backends):
     for name in methods:
         builder = METHODS[name][0]
         idx = builder(g)
@@ -36,19 +61,10 @@ def _bench_methods(g, queries, methods, ds_tag, out):
         out(csv_row(f"query/{ds_tag}/{name}", dt / len(queries) * 1e6,
                     f"n={g.n};queries={len(queries)}"))
         if name == "DL":
-            # device batched serving (the production path)
-            lo, li = idx.oracle.device_labels()
-            rng = np.random.default_rng(1)
-            qd = jnp.asarray(rng.integers(0, g.n, size=(N_QUERIES_DEV, 2), dtype=np.int32))
-            serve_step(lo, li, qd[:1024]).block_until_ready()  # compile
-            t0 = time.perf_counter()
-            serve_step(lo, li, qd).block_until_ready()
-            dt = time.perf_counter() - t0
-            out(csv_row(f"query/{ds_tag}/DL-device-batch", dt / N_QUERIES_DEV * 1e6,
-                        f"batch={N_QUERIES_DEV}"))
+            _bench_engine(g, idx, ds_tag, out, backends)
 
 
-def run(*, out=print):
+def run(*, out=print, backends=("dense",)):
     from benchmarks.common import HL_LARGE_OK
 
     small_methods = ["BFS", "GRAIL", "INTERVAL", "PWAH", "K-REACH", "2HOP", "HL", "DL"]
@@ -62,7 +78,7 @@ def run(*, out=print):
             tc = transitive_closure_bits(g)
             rng = np.random.default_rng(0)
             q, _ = sample_query_workload(g, N_QUERIES_HOST, rng, equal=equal, tc=tc)
-            _bench_methods(g, q, small_methods, f"{ds}/{'eq' if equal else 'rnd'}", out)
+            _bench_methods(g, q, small_methods, f"{ds}/{'eq' if equal else 'rnd'}", out, backends)
 
     out("# table5_6_query_large (paper Tables 5/6; scaled analogues)")
     out("name,us_per_call,derived")
@@ -72,8 +88,17 @@ def run(*, out=print):
         rng = np.random.default_rng(0)
         q = rng.integers(0, g.n, size=(N_QUERIES_HOST, 2)).astype(np.int32)
         methods = [m for m in large_methods if m != "HL" or ds in HL_LARGE_OK]
-        _bench_methods(g, q, methods, f"{ds}@{scale}/rnd", out)
+        _bench_methods(g, q, methods, f"{ds}@{scale}/rnd", out, backends)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="dense",
+                    help="comma-separated engine backends to sweep, or 'all'")
+    args = ap.parse_args()
+    backends = ENGINE_BACKENDS if args.backend == "all" else tuple(args.backend.split(","))
+    run(backends=backends)
 
 
 if __name__ == "__main__":
-    run()
+    main()

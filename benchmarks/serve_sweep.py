@@ -1,0 +1,31 @@
+"""Backend-sweep serving benchmark -> BENCH_serve.json.
+
+Runs the QueryEngine over every single-host backend on the citeseer analogue
+and records M-qps per backend, so the serving-perf trajectory is tracked
+PR over PR.
+
+  PYTHONPATH=src python -m benchmarks.serve_sweep
+  PYTHONPATH=src python -m benchmarks.serve_sweep --scale 0.05 --n-queries 200000
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.launch.serve import main
+
+DEFAULTS = [
+    "--dataset", "citeseer",
+    "--scale", "0.02",
+    "--n-queries", "100000",
+    "--backend", "all",
+    "--json-out", "BENCH_serve.json",
+]
+
+if __name__ == "__main__":
+    seen = set(a for a in sys.argv[1:] if a.startswith("--"))
+    extra = []
+    for flag, val in zip(DEFAULTS[::2], DEFAULTS[1::2]):
+        if flag not in seen:
+            extra += [flag, val]
+    sys.argv += extra
+    main()

@@ -32,15 +32,15 @@ def main():
     print(f"oracle vs BFS agreement: {agree}/500")
     assert agree == 500
 
-    # batched device serving
-    import jax.numpy as jnp
+    # batched serving through the engine (prefilters + bucketed batching)
+    from repro.serve import QueryEngine
+    from repro.serve.prefilter import topo_levels
 
-    from repro.core.query import serve_step
-
-    lo, li = dl.device_labels()
-    q = jnp.asarray(queries.astype(np.int32))
-    pred = serve_step(lo, li, q)
-    print(f"device serve_step: {int(pred.sum())} reachable of {len(queries)}")
+    engine = QueryEngine(dl, backend="auto", level=topo_levels(g))
+    pred = engine.query_batch(queries.astype(np.int32))
+    stats = engine.last_stats
+    print(f"engine[{stats['backend']}]: {int(pred.sum())} reachable of {len(queries)} "
+          f"({stats['n_prefiltered']} decided by prefilters)")
 
 
 if __name__ == "__main__":

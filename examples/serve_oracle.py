@@ -1,10 +1,11 @@
 """End-to-end serving driver (the paper is an indexing/serving system, so
 this is the paper-kind end-to-end example): build the Distribution-Labeling
-index on a dataset analogue and serve 100k batched requests with correctness
-checks and throughput reporting.
+index on a dataset analogue and serve 100k batched requests through the
+QueryEngine with correctness checks and throughput reporting.
 
   PYTHONPATH=src python examples/serve_oracle.py
   PYTHONPATH=src python examples/serve_oracle.py --dataset cit-Patents --scale 0.01
+  PYTHONPATH=src python examples/serve_oracle.py --backend all   # sweep backends
 """
 import sys
 

@@ -12,8 +12,11 @@ from repro.core.hierarchy import hierarchical_labeling, decompose
 from repro.core.backbone import one_side_backbone, fast_cover
 from repro.core.order import get_order
 from repro.core.query import serve_step, intersect_rows
+from repro.serve.engine import QueryEngine, select_backend
 
 __all__ = [
+    "QueryEngine",
+    "select_backend",
     "CondensedOracle",
     "build_oracle",
     "ReachabilityOracle",

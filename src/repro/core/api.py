@@ -5,22 +5,27 @@ that step made first-class:
 
     oracle = build_oracle(graph)            # graph may have cycles
     oracle.query(u, v)                      # original vertex ids
-    oracle.serve(queries)                   # batched device path
+    oracle.serve(queries)                   # batched engine path
+    oracle.serve(queries, backend="kernel") # pick the intersection backend
+
+Serving is owned by a ``repro.serve.QueryEngine`` (prefilters + length
+bucketing + pluggable backends); the condensation's topological levels feed
+the engine's level prefilter.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import Literal, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distribution import distribution_labeling
 from repro.core.hierarchy import hierarchical_labeling
 from repro.core.oracle import ReachabilityOracle
-from repro.core.query import serve_step
 from repro.graph.csr import CSRGraph
 from repro.graph.scc import condense_to_dag
+from repro.serve.engine import QueryEngine
+from repro.serve.prefilter import topo_levels
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,37 +33,35 @@ class CondensedOracle:
     """Reachability oracle over the SCC condensation of a digraph.
 
     Queries take ORIGINAL vertex ids; two vertices in the same SCC reach
-    each other by definition.
+    each other by definition (the engine's same-id prefilter answers them).
     """
 
     oracle: ReachabilityOracle
     comp: np.ndarray  # int32[n_original] -> condensation vertex id
+    engine: QueryEngine
 
     @property
     def total_label_size(self) -> int:
         return self.oracle.total_label_size
 
     def query(self, u: int, v: int) -> bool:
-        cu, cv = int(self.comp[u]), int(self.comp[v])
-        if cu == cv:
-            return True
-        return self.oracle.query(cu, cv)
+        return self.engine.query(int(self.comp[u]), int(self.comp[v]))
 
-    def serve(self, queries: np.ndarray) -> np.ndarray:
-        """Batched device path. queries: int32[B, 2] original ids -> bool[B]."""
-        cq = self.comp[queries].astype(np.int32)
-        lo, li = self.oracle.device_labels()
-        same = cq[:, 0] == cq[:, 1]
-        out = np.asarray(serve_step(lo, li, jnp.asarray(cq)))
-        return out | same
+    def serve(self, queries: np.ndarray, backend: Optional[str] = None) -> np.ndarray:
+        """Batched engine path. queries: int[B, 2] original ids -> bool[B]."""
+        cq = self.comp[np.asarray(queries, dtype=np.int64)].astype(np.int32)
+        return self.engine.query_batch(cq, backend=backend)
 
 
 def build_oracle(
     g: CSRGraph,
     method: Literal["distribution", "hierarchical"] = "distribution",
+    backend: str = "auto",
+    mesh=None,
+    bucketing: bool = True,
     **kwargs,
 ) -> CondensedOracle:
-    """Condense SCCs, then label with DL (default) or HL."""
+    """Condense SCCs, label with DL (default) or HL, wire up the serve engine."""
     dag, comp = condense_to_dag(g)
     if method == "distribution":
         oracle = distribution_labeling(dag, **kwargs)
@@ -66,4 +69,11 @@ def build_oracle(
         oracle = hierarchical_labeling(dag, **kwargs)
     else:
         raise ValueError(method)
-    return CondensedOracle(oracle=oracle, comp=comp)
+    engine = QueryEngine(
+        oracle,
+        backend=backend,
+        level=topo_levels(dag),
+        mesh=mesh,
+        bucketing=bucketing,
+    )
+    return CondensedOracle(oracle=oracle, comp=comp, engine=engine)

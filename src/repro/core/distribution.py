@@ -87,4 +87,8 @@ def distribution_labeling(
                     visited[x] = stamp
                     dq.append(int(x))
 
-    return finalize_labels(L_out_lists, L_in_lists)
+    # rank space: hop_rank[order[i]] = i — rows come out rank-ordered, so the
+    # serve-path merges hit the highest-ranked (most frequent) hop first
+    hop_rank = np.empty(n, dtype=np.int32)
+    hop_rank[np.asarray(order, dtype=np.int64)] = np.arange(n, dtype=np.int32)
+    return finalize_labels(L_out_lists, L_in_lists, hop_rank=hop_rank)

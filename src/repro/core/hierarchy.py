@@ -115,8 +115,10 @@ def hierarchical_labeling(
         core_oracle = distribution_labeling(core)
         for lv in range(core.n):
             gv = int(core_glob[lv])
-            row_o = core_oracle.L_out[lv, : core_oracle.out_len[lv]]
-            row_i = core_oracle.L_in[lv, : core_oracle.in_len[lv]]
+            # DL labels live in rank space; map back to core-local vertex ids
+            # before lifting to global ids
+            row_o = core_oracle.unrank(core_oracle.L_out[lv, : core_oracle.out_len[lv]])
+            row_i = core_oracle.unrank(core_oracle.L_in[lv, : core_oracle.in_len[lv]])
             out_sets[gv] = {int(core_glob[x]) for x in row_o}
             in_sets[gv] = {int(core_glob[x]) for x in row_i}
 

@@ -6,16 +6,28 @@ Labels are finalized into dense padded int32 matrices [n, L_max] (rows sorted
 ascending, INVALID = -1 padding) — the device/serving layout. The host keeps
 per-row lengths for exact-size accounting (paper's index-size metric counts
 total integers, Figures 3/4).
+
+Rank-ordered labels: when a construction order is available (DL's §5.2 rank),
+``finalize_labels`` remaps every hop id to its *position in the processing
+order*. The remap is a bijection, so intersection emptiness is unchanged, but
+rows sorted ascending are now simultaneously value-sorted (searchsorted merge
+still works) and rank-ordered: the highest-ranked hop — the one recorded by
+the most labels — sits at the front of every row, so intersections terminate
+early on positive queries (hierarchical-hub-labeling style early exit).
+``hop_rank`` keeps the vertex->rank map; ``unrank`` recovers vertex ids.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import INVALID
+
+# length of the high-rank prefix probed before the full merge in host queries
+_PREFIX = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +36,8 @@ class ReachabilityOracle:
     L_in: np.ndarray   # int32[n, Li_max]
     out_len: np.ndarray  # int32[n]
     in_len: np.ndarray   # int32[n]
+    # vertex -> rank when labels live in rank space (None = vertex-id space)
+    hop_rank: Optional[np.ndarray] = None
 
     @property
     def n(self) -> int:
@@ -38,23 +52,36 @@ class ReachabilityOracle:
     def max_label_len(self) -> int:
         return int(max(self.L_out.shape[1], self.L_in.shape[1]))
 
+    def unrank(self, hops: np.ndarray) -> np.ndarray:
+        """Map label values back to vertex ids (identity in vertex-id space)."""
+        if self.hop_rank is None:
+            return np.asarray(hops)
+        inv = getattr(self, "_inv_rank", None)
+        if inv is None:  # memoize: inv[rank] = vertex
+            inv = np.argsort(self.hop_rank).astype(np.int32)
+            object.__setattr__(self, "_inv_rank", inv)
+        return inv[np.asarray(hops)]
+
     # ---------------- host query paths ----------------
 
     def query(self, u: int, v: int) -> bool:
-        """Single query via sorted-merge intersection (the paper's §1 fix:
-        sorted vectors, not hash sets)."""
+        """Single query: vectorized sorted intersection (searchsorted), with a
+        high-rank prefix probe first — in rank space the frequent hops sort to
+        the front, so most positive queries resolve in the prefix."""
         a = self.L_out[u, : self.out_len[u]]
         b = self.L_in[v, : self.in_len[v]]
-        i = j = 0
         na, nb = a.shape[0], b.shape[0]
-        while i < na and j < nb:
-            if a[i] == b[j]:
+        if na == 0 or nb == 0:
+            return False
+        if a[0] == b[0]:
+            return True
+        if na > _PREFIX and nb > _PREFIX:
+            pa, pb = a[:_PREFIX], b[:_PREFIX]
+            pos = np.searchsorted(pa, pb)
+            if (pa[np.minimum(pos, _PREFIX - 1)] == pb).any():
                 return True
-            if a[i] < b[j]:
-                i += 1
-            else:
-                j += 1
-        return False
+        pos = np.searchsorted(a, b)
+        return bool((a[np.minimum(pos, na - 1)] == b).any())
 
     def query_batch_np(self, queries: np.ndarray) -> np.ndarray:
         """Vectorized all-pairs-compare batch query (numpy mirror of the
@@ -75,8 +102,14 @@ def finalize_labels(
     out_lists: Sequence[Sequence[int]],
     in_lists: Sequence[Sequence[int]],
     pad_to_multiple: int = 8,
+    hop_rank: Optional[np.ndarray] = None,
 ) -> ReachabilityOracle:
-    """Pack per-vertex python label lists into the dense oracle layout."""
+    """Pack per-vertex python label lists into the dense oracle layout.
+
+    With ``hop_rank`` (int32[n], rank[v] = position of v in the construction
+    order, 0 = highest), hop ids are remapped to rank space before the
+    ascending row sort — see module docstring.
+    """
     n = len(out_lists)
     out_len = np.array([len(x) for x in out_lists], dtype=np.int32)
     in_len = np.array([len(x) for x in in_lists], dtype=np.int32)
@@ -87,7 +120,10 @@ def finalize_labels(
         mat = np.full((n, lmax), INVALID, dtype=np.int32)
         for i, row in enumerate(lists):
             if row:
-                mat[i, : len(row)] = np.sort(np.asarray(row, dtype=np.int32))
+                vals = np.asarray(row, dtype=np.int32)
+                if hop_rank is not None:
+                    vals = hop_rank[vals]
+                mat[i, : len(row)] = np.sort(vals)
         return mat
 
     return ReachabilityOracle(
@@ -95,6 +131,7 @@ def finalize_labels(
         L_in=_pack(in_lists, in_len),
         out_len=out_len,
         in_len=in_len,
+        hop_rank=None if hop_rank is None else np.asarray(hop_rank, dtype=np.int32),
     )
 
 

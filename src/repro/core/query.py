@@ -1,96 +1,19 @@
-"""Batched oracle query engine (the serve path).
-
-One serve_step: queries int32[B, 2] -> bool[B].
-  gather L_out[q[:,0]] and L_in[q[:,1]] rows, then batched intersection.
-
-The intersection is the paper's hot loop. On TPU we replace the branchy
-sorted-merge with an all-pairs tile compare (VPU-friendly; |L| <= a few
-hundred so L^2 compares beat serial merges by orders of magnitude in
-throughput). `use_kernel=True` routes through the Pallas kernel.
+"""Compatibility shim — the batched/sharded serve path moved to
+``repro.serve.engine`` (the QueryEngine subsystem). Import from there; this
+module keeps the long-standing ``repro.core.query`` entry points alive.
 """
 from __future__ import annotations
 
-from functools import partial
+from repro.serve.engine import (  # noqa: F401
+    intersect_rows,
+    make_hop_sharded_serve_step,
+    make_sharded_serve_step,
+    serve_step,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.graph.csr import INVALID
-
-
-@jax.jit
-def intersect_rows(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """a: int32[B, La], b: int32[B, Lb] (INVALID padded) -> bool[B]."""
-    eq = a[:, :, None] == b[:, None, :]
-    valid = (a[:, :, None] != INVALID) & (b[:, None, :] != INVALID)
-    return (eq & valid).any(axis=(1, 2))
-
-
-@partial(jax.jit, static_argnames=("use_kernel",))
-def serve_step(
-    L_out: jnp.ndarray,
-    L_in: jnp.ndarray,
-    queries: jnp.ndarray,
-    use_kernel: bool = False,
-) -> jnp.ndarray:
-    """Answer a batch of reachability queries.
-
-    L_out: int32[n, Lo], L_in: int32[n, Li], queries: int32[B, 2].
-    """
-    a = jnp.take(L_out, queries[:, 0], axis=0)
-    b = jnp.take(L_in, queries[:, 1], axis=0)
-    if use_kernel:
-        from repro.kernels.ops import label_intersect
-
-        return label_intersect(a, b)
-    return intersect_rows(a, b)
-
-
-def make_sharded_serve_step(mesh, data_axes=("pod", "data")):
-    """Production serve_step: labels replicated over the model axis, queries
-    sharded over the data axes. Returns (jitted_fn, in_shardings, out_sharding).
-    """
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    label_sharding = NamedSharding(mesh, P())               # replicated
-    query_sharding = NamedSharding(mesh, P(data_axes, None))
-    out_sharding = NamedSharding(mesh, P(data_axes))
-
-    fn = jax.jit(
-        lambda lo, li, q: serve_step(lo, li, q),
-        in_shardings=(label_sharding, label_sharding, query_sharding),
-        out_shardings=out_sharding,
-    )
-    return fn, (label_sharding, label_sharding, query_sharding), out_sharding
-
-
-def make_hop_sharded_serve_step(mesh, model_axis="model", data_axes=("pod", "data")):
-    """Large-graph variant: label MATRICES sharded over the model axis along
-    the hop dimension (each device holds a slice of every row); each shard
-    computes a partial intersection hit and the results OR-reduce over the
-    model axis. Queries sharded over data axes.
-
-    This is the "labels larger than one device" serving mode.
-    """
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    label_sharding = NamedSharding(mesh, P(None, model_axis))
-    query_sharding = NamedSharding(mesh, P(data_axes, None))
-    out_sharding = NamedSharding(mesh, P(data_axes))
-
-    def step(L_out, L_in, queries):
-        a = jnp.take(L_out, queries[:, 0], axis=0)
-        b_full = jnp.take(L_in, queries[:, 1], axis=0)
-        # each hop-shard of `a` must compare against ALL hops of b:
-        # jnp ops under jit+sharding constraints let XLA insert the all-gather
-        # of the (small) b rows; the big L_out stays sharded.
-        eq = a[:, :, None] == b_full[:, None, :]
-        valid = (a[:, :, None] != INVALID) & (b_full[:, None, :] != INVALID)
-        return (eq & valid).any(axis=(1, 2))
-
-    fn = jax.jit(
-        step,
-        in_shardings=(label_sharding, label_sharding, query_sharding),
-        out_shardings=out_sharding,
-    )
-    return fn, (label_sharding, label_sharding, query_sharding), out_sharding
+__all__ = [
+    "intersect_rows",
+    "serve_step",
+    "make_sharded_serve_step",
+    "make_hop_sharded_serve_step",
+]

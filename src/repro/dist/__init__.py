@@ -1,0 +1,6 @@
+"""Distribution layer: multi-device execution patterns that are not
+oracle-specific (the oracle's own sharded serve lives in ``repro.serve``).
+"""
+from repro.dist.pipeline import pipeline_apply
+
+__all__ = ["pipeline_apply"]

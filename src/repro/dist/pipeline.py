@@ -1,0 +1,63 @@
+"""GPipe-style pipeline parallelism via shard_map + ppermute.
+
+Params carry a leading stage dimension (leaf shape [S, ...]); the input is a
+stream of M microbatches (axis 0). Each mesh device along the stage axis owns
+one stage's params; microbatches stream through the ring with one
+collective_permute per step, so the full schedule is M + S - 1 steps with all
+stages busy in the steady state.
+
+The stage fn must be shape-preserving on the microbatch (activation in ==
+activation out), which is the standard homogeneous-pipeline contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(params, x, fn, mesh, stage_axis: str = "stage"):
+    """Apply S stacked stages to M microbatches with pipeline parallelism.
+
+    params: pytree, every leaf shaped [S, ...] (stage-major).
+    x:      [M, ...] microbatch stream (replicated across the mesh).
+    fn:     (stage_params, microbatch) -> microbatch, shape-preserving.
+
+    Returns [M, ...]: microbatch i pushed through stages 0..S-1, identical to
+    the sequential reference ``for s in range(S): x = fn(params[s], x)``.
+    """
+    S = mesh.shape[stage_axis]
+    M = x.shape[0]
+    ring = [(i, (i + 1) % S) for i in range(S)]
+
+    def local(p_shard, xfull):
+        s = jax.lax.axis_index(stage_axis)
+        p_local = jax.tree.map(lambda a: a[0], p_shard)
+        buf = jnp.zeros_like(xfull[0])
+        out = jnp.zeros_like(xfull)
+
+        def step(t, carry):
+            buf, out = carry
+            # stage 0 injects microbatch t from the stream; later stages
+            # consume what the previous stage handed over last step
+            mb = jnp.where(s == 0, xfull[jnp.clip(t, 0, M - 1)], buf)
+            y = fn(p_local, mb)
+            buf_next = jax.lax.ppermute(y, stage_axis, ring)
+            # the last stage emits microbatch t-(S-1) once the fill drains
+            idx = t - (S - 1)
+            take = (s == S - 1) & (idx >= 0)
+            out = jnp.where(take, out.at[jnp.clip(idx, 0, M - 1)].set(y), out)
+            return buf_next, out
+
+        _, out = jax.lax.fori_loop(0, M + S - 1, step, (buf, out))
+        # only the last stage holds results; psum replicates (others are zero)
+        return jax.lax.psum(out, stage_axis)
+
+    run = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(stage_axis), P()),
+        out_specs=P(),
+    )
+    return run(params, x)

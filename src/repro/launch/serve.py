@@ -1,24 +1,70 @@
-"""Oracle serving driver: build the index, answer batched query streams.
+"""Oracle serving driver: build the index, serve batched query streams
+through the QueryEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --dataset citeseer --scale 0.02 \
-      --n-queries 100000 --batch 4096
+      --n-queries 100000 --batch 4096 --backend dense
 
 Builds Distribution-Labeling on the (synthetic analogue) dataset, then runs
-the batched serve_step (device path) and reports throughput + correctness
-against ground truth on a sample.
+the engine's batched path (prefilters + length-bucketed micro-batching +
+the chosen intersection backend) and reports throughput + correctness
+against ground truth on a sample. ``--backend all`` sweeps every
+single-host backend.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distribution import distribution_labeling
-from repro.core.query import serve_step
+from repro.core.api import build_oracle
+from repro.serve.engine import select_backend
 from repro.graph.generators import paper_dataset_analogue, random_dag
 from repro.graph.reach import reachable_set
+
+HOST_BACKENDS = ("host", "dense", "kernel")
+
+
+def build(args):
+    g = (
+        paper_dataset_analogue(args.dataset, scale=args.scale)
+        if args.dataset != "random"
+        else random_dag(20000, 50000, seed=args.seed)
+    )
+    print(f"graph: n={g.n} m={g.m}")
+    t0 = time.perf_counter()
+    oracle = build_oracle(g, bucketing=not args.no_bucketing)
+    t_build = time.perf_counter() - t0
+    print(
+        f"DL build: {t_build:.2f}s  label ints={oracle.total_label_size} "
+        f"(avg {oracle.total_label_size / g.n:.1f}/vertex)  "
+        f"tier widths={oracle.engine.widths}"
+    )
+    return g, oracle
+
+
+def serve_loop(oracle, queries: np.ndarray, batch: int, backend: str) -> tuple[float, np.ndarray]:
+    """Run the query stream through the engine; returns (seconds, answers)."""
+    n_q = queries.shape[0]
+    oracle.serve(queries[:batch], backend=backend)  # warmup/compile
+    if n_q % batch:  # the tail batch pads to different tile shapes — warm it too
+        oracle.serve(queries[n_q - n_q % batch :], backend=backend)
+    t0 = time.perf_counter()
+    results = []
+    for lo in range(0, n_q, batch):
+        results.append(oracle.serve(queries[lo : lo + batch], backend=backend))
+    dt = time.perf_counter() - t0
+    return dt, np.concatenate(results)
+
+
+def check_sample(g, queries: np.ndarray, pred: np.ndarray, n_check: int = 200) -> int:
+    bad = 0
+    for i in range(min(n_check, queries.shape[0])):
+        u, v = int(queries[i, 0]), int(queries[i, 1])
+        truth = bool(reachable_set(g, u)[v]) or u == v
+        bad += truth != bool(pred[i])
+    return bad
 
 
 def main() -> None:
@@ -28,54 +74,68 @@ def main() -> None:
     ap.add_argument("--n-queries", type=int, default=100_000)
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto",
+                    help="auto|host|dense|kernel, or 'all' to sweep")
+    ap.add_argument("--no-bucketing", action="store_true",
+                    help="disable length-bucketed micro-batching")
+    ap.add_argument("--json-out", default=None,
+                    help="write per-backend M-qps results to this JSON file")
     args = ap.parse_args()
 
-    g = (
-        paper_dataset_analogue(args.dataset, scale=args.scale)
-        if args.dataset != "random"
-        else random_dag(20000, 50000, seed=args.seed)
-    )
-    print(f"graph: n={g.n} m={g.m}")
-    t0 = time.perf_counter()
-    oracle = distribution_labeling(g)
-    t_build = time.perf_counter() - t0
-    print(
-        f"DL build: {t_build:.2f}s  label ints={oracle.total_label_size} "
-        f"(avg {oracle.total_label_size / g.n:.1f}/vertex)"
-    )
+    backends = list(HOST_BACKENDS) if args.backend == "all" else [args.backend]
+    for be in backends:
+        if be != "auto":
+            try:
+                select_backend(be)
+            except ValueError as e:
+                ap.error(str(e))
 
+    g, oracle = build(args)
     rng = np.random.default_rng(args.seed)
     queries = rng.integers(0, g.n, size=(args.n_queries, 2)).astype(np.int32)
-    lo, li = oracle.device_labels()
 
-    # warmup + timed batched serving
-    q0 = jnp.asarray(queries[: args.batch])
-    serve_step(lo, li, q0).block_until_ready()
-    t0 = time.perf_counter()
-    n_done = 0
-    results = []
-    while n_done < args.n_queries:
-        qb = jnp.asarray(queries[n_done : n_done + args.batch])
-        results.append(serve_step(lo, li, qb))
-        n_done += qb.shape[0]
-    results[-1].block_until_ready()
-    dt = time.perf_counter() - t0
-    print(
-        f"served {args.n_queries} queries in {dt:.3f}s "
-        f"({args.n_queries / dt / 1e6:.2f} M qps; "
-        f"{dt / args.n_queries * 1e9:.0f} ns/query)"
-    )
+    records = {}
+    failed = False
+    for be in backends:
+        dt, pred = serve_loop(oracle, queries, args.batch, be)
+        stats = oracle.engine.last_stats
+        mqps = args.n_queries / dt / 1e6
+        print(
+            f"[{stats['backend']}] served {args.n_queries} queries in {dt:.3f}s "
+            f"({mqps:.2f} M qps; {dt / args.n_queries * 1e9:.0f} ns/query)  "
+            f"prefiltered {stats['n_prefiltered']}/{stats['n_queries']} of last batch"
+        )
+        bad = check_sample(g, queries, pred)
+        n_check = min(200, args.n_queries)
+        print(f"[{stats['backend']}] correctness sample: {n_check - bad}/{n_check} ok")
+        failed |= bad > 0
+        records[stats["backend"]] = {
+            "mqps": round(mqps, 4),
+            "ns_per_query": round(dt / args.n_queries * 1e9, 1),
+            "bucketing": not args.no_bucketing,
+            "sample_errors": bad,
+        }
 
-    # correctness sample
-    pred = np.concatenate([np.asarray(r) for r in results])
-    n_check = min(200, args.n_queries)
-    bad = 0
-    for i in range(n_check):
-        u, v = int(queries[i, 0]), int(queries[i, 1])
-        truth = bool(reachable_set(g, u)[v]) or u == v
-        bad += truth != bool(pred[i])
-    print(f"correctness sample: {n_check - bad}/{n_check} ok")
-    if bad:
+    if args.json_out:
+        payload = {
+            "dataset": args.dataset,
+            "scale": args.scale,
+            "n": g.n,
+            "m": g.m,
+            "n_queries": args.n_queries,
+            "batch": args.batch,
+            "label_ints": oracle.total_label_size,
+            "tier_widths": oracle.engine.widths,
+            "jax_platform": __import__("jax").default_backend(),
+            "note": "kernel backend runs the Pallas kernel in interpret mode off-TPU",
+            "backends": records,
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json_out}")
+
+    if failed:
         raise SystemExit(1)
 
 

@@ -1,0 +1,33 @@
+"""The oracle serve subsystem: QueryEngine + batching planner + prefilters.
+
+Every query path in the repo routes through ``QueryEngine``; future serving
+work (caching, async, new shardings) lands here.
+"""
+from repro.serve.engine import (
+    BACKENDS,
+    QueryEngine,
+    intersect_rows,
+    make_hop_sharded_serve_step,
+    make_sharded_serve_step,
+    select_backend,
+    serve_step,
+)
+from repro.serve.planner import BatchPlan, TierPlan, plan_batch, tier_widths
+from repro.serve.prefilter import PrefilterResult, apply_prefilters, topo_levels
+
+__all__ = [
+    "BACKENDS",
+    "QueryEngine",
+    "select_backend",
+    "serve_step",
+    "intersect_rows",
+    "make_sharded_serve_step",
+    "make_hop_sharded_serve_step",
+    "BatchPlan",
+    "TierPlan",
+    "plan_batch",
+    "tier_widths",
+    "PrefilterResult",
+    "apply_prefilters",
+    "topo_levels",
+]

@@ -1,0 +1,279 @@
+"""QueryEngine: one serve subsystem, pluggable intersection backends.
+
+Every query path in the repo (host point queries, batched device serving,
+sharded production serving, benchmarks, examples) routes through here. The
+engine owns the serving pipeline:
+
+    queries -> prefilters (repro.serve.prefilter)
+            -> length-bucketed micro-batches (repro.serve.planner)
+            -> backend intersection
+            -> scatter back
+
+Backends:
+  host         per-query sorted merge on the CPU (searchsorted + rank-ordered
+               early exit; the reference path)
+  dense        all-pairs jnp compare, jit per (tile, width) — the XLA path
+  kernel       Pallas ``label_intersect`` (interpret off-TPU)
+  sharded      labels replicated, queries sharded over the data axes
+  sharded_hop  label matrices sharded over the model axis along the hop dim
+               (labels-larger-than-one-device mode), OR-reduced
+
+``backend="auto"`` picks: sharded when a mesh is supplied, kernel on TPU,
+dense otherwise.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import INVALID
+from repro.serve.planner import BatchPlan, plan_batch, tier_widths
+from repro.serve.prefilter import apply_prefilters
+
+BACKENDS = ("host", "dense", "kernel", "sharded", "sharded_hop")
+
+
+def select_backend(name: Optional[str] = None, mesh=None) -> str:
+    """Resolve a backend name ('auto'/None = detect from mesh + platform)."""
+    if name in (None, "auto"):
+        if mesh is not None:
+            return "sharded"
+        return "kernel" if jax.default_backend() == "tpu" else "dense"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    if name in ("sharded", "sharded_hop") and mesh is None:
+        raise ValueError(f"backend {name!r} requires a mesh")
+    return name
+
+
+# ---------------------------------------------------------------- primitives
+
+
+@jax.jit
+def intersect_rows(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: int32[B, La], b: int32[B, Lb] (INVALID padded) -> bool[B]."""
+    eq = a[:, :, None] == b[:, None, :]
+    valid = (a[:, :, None] != INVALID) & (b[:, None, :] != INVALID)
+    return (eq & valid).any(axis=(1, 2))
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def serve_step(
+    L_out: jnp.ndarray,
+    L_in: jnp.ndarray,
+    queries: jnp.ndarray,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """One-shot batched intersection at full label width (the legacy path;
+    the engine adds prefilters + bucketing on top).
+
+    L_out: int32[n, Lo], L_in: int32[n, Li], queries: int32[B, 2].
+    """
+    a = jnp.take(L_out, queries[:, 0], axis=0)
+    b = jnp.take(L_in, queries[:, 1], axis=0)
+    if use_kernel:
+        from repro.kernels.ops import label_intersect
+
+        return label_intersect(a, b)
+    return intersect_rows(a, b)
+
+
+@partial(jax.jit, static_argnames=("width", "use_kernel"))
+def _tier_intersect(L_out, L_in, queries, width: int, use_kernel: bool):
+    """Gather + truncate to the tier width + intersect. One trace per
+    (tile rows, width, backend) triple."""
+    a = jnp.take(L_out, queries[:, 0], axis=0)[:, :width]
+    b = jnp.take(L_in, queries[:, 1], axis=0)[:, :width]
+    if use_kernel:
+        from repro.kernels.ops import label_intersect
+
+        return label_intersect(a, b)
+    return intersect_rows(a, b)
+
+
+# ------------------------------------------------------------ sharded modes
+
+
+def make_sharded_serve_step(mesh, data_axes=("pod", "data")):
+    """Production serve_step: labels replicated over the model axis, queries
+    sharded over the data axes. Returns (jitted_fn, in_shardings, out_sharding).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    label_sharding = NamedSharding(mesh, P())               # replicated
+    query_sharding = NamedSharding(mesh, P(data_axes, None))
+    out_sharding = NamedSharding(mesh, P(data_axes))
+
+    fn = jax.jit(
+        lambda lo, li, q: serve_step(lo, li, q),
+        in_shardings=(label_sharding, label_sharding, query_sharding),
+        out_shardings=out_sharding,
+    )
+    return fn, (label_sharding, label_sharding, query_sharding), out_sharding
+
+
+def make_hop_sharded_serve_step(mesh, model_axis="model", data_axes=("pod", "data")):
+    """Large-graph variant: label MATRICES sharded over the model axis along
+    the hop dimension (each device holds a slice of every row); each shard
+    computes a partial intersection hit and the results OR-reduce over the
+    model axis. Queries sharded over data axes.
+
+    This is the "labels larger than one device" serving mode.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    label_sharding = NamedSharding(mesh, P(None, model_axis))
+    query_sharding = NamedSharding(mesh, P(data_axes, None))
+    out_sharding = NamedSharding(mesh, P(data_axes))
+
+    def step(L_out, L_in, queries):
+        a = jnp.take(L_out, queries[:, 0], axis=0)
+        b_full = jnp.take(L_in, queries[:, 1], axis=0)
+        # each hop-shard of `a` must compare against ALL hops of b:
+        # jnp ops under jit+sharding constraints let XLA insert the all-gather
+        # of the (small) b rows; the big L_out stays sharded.
+        eq = a[:, :, None] == b_full[:, None, :]
+        valid = (a[:, :, None] != INVALID) & (b_full[:, None, :] != INVALID)
+        return (eq & valid).any(axis=(1, 2))
+
+    fn = jax.jit(
+        step,
+        in_shardings=(label_sharding, label_sharding, query_sharding),
+        out_shardings=out_sharding,
+    )
+    return fn, (label_sharding, label_sharding, query_sharding), out_sharding
+
+
+# ----------------------------------------------------------------- engine
+
+
+class QueryEngine:
+    """The serve subsystem for one ReachabilityOracle.
+
+    Parameters
+    ----------
+    oracle : ReachabilityOracle
+        Labels in the engine's id space (condensation ids when built through
+        ``repro.core.api``).
+    backend : str
+        One of BACKENDS or "auto".
+    level : optional int32[n]
+        Topological levels for the level prefilter (``prefilter.topo_levels``).
+    mesh : optional jax Mesh
+        Required for the sharded backends.
+    bucketing : bool
+        Length-bucketed micro-batching for dense/kernel backends.
+    """
+
+    def __init__(
+        self,
+        oracle,
+        backend: str = "auto",
+        level: Optional[np.ndarray] = None,
+        mesh=None,
+        data_axes: Optional[Sequence[str]] = None,
+        model_axis: str = "model",
+        bucketing: bool = True,
+        n_tiers: int = 3,
+        min_tile: int = 256,
+    ):
+        self.oracle = oracle
+        self.mesh = mesh
+        self.backend = select_backend(backend, mesh)
+        self.level = None if level is None else np.asarray(level, dtype=np.int32)
+        self.bucketing = bucketing
+        self.min_tile = int(min_tile)
+        if data_axes is None and mesh is not None:
+            data_axes = tuple(ax for ax in mesh.axis_names if ax != model_axis)
+        self.data_axes = data_axes
+        self.model_axis = model_axis
+        self._lo, self._li = oracle.device_labels()
+        self.widths = tier_widths(
+            oracle.out_len, oracle.in_len, oracle.max_label_len, n_tiers=n_tiers
+        )
+        self._sharded_fns: dict = {}
+        self.last_stats: dict = {}
+
+    # ------------------------------------------------------------- queries
+
+    def query(self, u: int, v: int) -> bool:
+        """Single host query (prefilters + rank-ordered sorted merge)."""
+        if u == v:
+            return True
+        o = self.oracle
+        if o.out_len[u] == 0 or o.in_len[v] == 0:
+            return False
+        if self.level is not None and self.level[u] >= self.level[v]:
+            return False
+        return o.query(u, v)
+
+    def query_batch(self, queries: np.ndarray, backend: Optional[str] = None) -> np.ndarray:
+        """Answer int[B, 2] queries -> bool[B]."""
+        queries = np.ascontiguousarray(np.asarray(queries, dtype=np.int32))
+        backend = self.backend if backend is None else select_backend(backend, self.mesh)
+        o = self.oracle
+
+        pf = apply_prefilters(queries, o.out_len, o.in_len, self.level)
+        out = pf.decided & pf.value
+        rest_idx = np.nonzero(~pf.decided)[0]
+        self.last_stats = {
+            "backend": backend,
+            "n_queries": int(queries.shape[0]),
+            "n_prefiltered": int(queries.shape[0] - rest_idx.size),
+            "tiers": [],
+        }
+        if rest_idx.size == 0:
+            return out
+        rest = queries[rest_idx]
+
+        if backend == "host":
+            res = np.fromiter((o.query(int(u), int(v)) for u, v in rest), dtype=bool,
+                              count=rest.shape[0])
+        elif backend in ("dense", "kernel"):
+            res = self._device_batch(rest, use_kernel=backend == "kernel")
+        else:
+            res = self._sharded_batch(rest, backend)
+        out[rest_idx] = res
+        return out
+
+    # ------------------------------------------------------------ backends
+
+    def _device_batch(self, rest: np.ndarray, use_kernel: bool) -> np.ndarray:
+        o = self.oracle
+        if not self.bucketing:
+            r = serve_step(self._lo, self._li, jnp.asarray(rest), use_kernel=use_kernel)
+            return np.asarray(r)
+        plan = plan_batch(rest, o.out_len, o.in_len, self.widths, min_tile=self.min_tile)
+        results = []
+        for tier in plan.tiers:
+            q = jnp.asarray(plan.padded_queries(rest, tier))
+            results.append(_tier_intersect(self._lo, self._li, q, tier.width, use_kernel))
+            self.last_stats["tiers"].append(
+                {"width": tier.width, "count": int(tier.idx.size), "rows": tier.rows}
+            )
+        return plan.scatter([np.asarray(r) for r in results])
+
+    def _sharded_batch(self, rest: np.ndarray, backend: str) -> np.ndarray:
+        fn = self._sharded_fns.get(backend)
+        if fn is None:
+            if backend == "sharded":
+                fn, _, _ = make_sharded_serve_step(self.mesh, data_axes=self.data_axes)
+            else:
+                fn, _, _ = make_hop_sharded_serve_step(
+                    self.mesh, model_axis=self.model_axis, data_axes=self.data_axes
+                )
+            self._sharded_fns[backend] = fn
+        # fixed shapes across devices: pad the batch to a data-shard multiple
+        shards = 1
+        for ax in self.data_axes or ():
+            shards *= self.mesh.shape[ax]
+        B = rest.shape[0]
+        pad = (-B) % max(shards, 1)
+        if pad:
+            rest = np.concatenate([rest, np.zeros((pad, 2), dtype=rest.dtype)], axis=0)
+        res = np.asarray(fn(self._lo, self._li, jnp.asarray(rest)))
+        return res[:B]

@@ -1,6 +1,8 @@
 """End-to-end oracle API over cyclic digraphs (SCC condensation path)."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.api import build_oracle

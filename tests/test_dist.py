@@ -75,7 +75,9 @@ print('DRYRUN_OK')
 def _run(snippet: str, marker: str):
     proc = subprocess.run(
         [sys.executable, "-c", snippet],
-        capture_output=True, text=True, timeout=420,
+        # generous: these spawn full XLA compiles and share the host with
+        # other jobs — 420s flakes when the machine is loaded
+        capture_output=True, text=True, timeout=1200,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
              "HOME": "/root"},
         cwd="/root/repo",

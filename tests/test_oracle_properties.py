@@ -9,6 +9,8 @@
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.distribution import distribution_labeling
@@ -58,7 +60,8 @@ def test_device_dl_matches_host(g):
     dev = distribution_labeling_jax(g, l_max=max(int(host.max_label_len), 8))
     for v in range(g.n):
         for h_mat, d_mat in ((host.L_out, dev.L_out), (host.L_in, dev.L_in)):
-            a = set(h_mat[v][h_mat[v] != -1].tolist())
+            # host labels live in rank space; map back to vertex ids
+            a = set(host.unrank(h_mat[v][h_mat[v] != -1]).tolist())
             b = set(d_mat[v][d_mat[v] != -1].tolist())
             assert a == b, (v, a, b)
 
