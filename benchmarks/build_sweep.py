@@ -1,0 +1,31 @@
+"""Construction-sweep benchmark -> BENCH_build.json.
+
+Runs the construction engine (wave/bitset) against the scalar reference
+builder on the tracked dataset/scale grid and records build time, label
+ints, labels/sec, and the byte-identity check per dataset — the
+construction-side sibling of ``serve_sweep.py``.
+
+  PYTHONPATH=src python -m benchmarks.build_sweep
+  PYTHONPATH=src python -m benchmarks.build_sweep --quick
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import construction_time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: one small dataset, one rep "
+                         "(writes BENCH_build_quick.json)")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    if args.json_out is None:
+        args.json_out = "BENCH_build_quick.json" if args.quick else "BENCH_build.json"
+    construction_time._engine_vs_reference_json(args.json_out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -46,7 +46,13 @@ def build_hl(g):
 
 
 def build_dl(g):
+    """DL through the construction engine (impl='auto': wave where it pays)."""
     return _OracleIndex(distribution_labeling(g), "DL")
+
+
+def build_dl_ref(g):
+    """DL through the seed scalar reference builder (the engine's baseline)."""
+    return _OracleIndex(distribution_labeling(g, impl="reference"), "DL-ref")
 
 
 # name -> (builder, scales_to_large)
@@ -59,6 +65,7 @@ METHODS: Dict[str, tuple] = {
     "2HOP": (TwoHopSetCover, False),
     "HL": (build_hl, True),
     "DL": (build_dl, True),
+    "DL-ref": (build_dl_ref, True),
 }
 
 SMALL_DATASETS = ["amaze", "kegg", "nasa", "reactome", "xmark", "hpycyc"]

@@ -1,5 +1,19 @@
-"""Paper Tables 4 & 7: index construction time per method per dataset."""
+"""Paper Tables 4 & 7: index construction time per method per dataset.
+
+Besides the CSV rows, emits machine-readable ``BENCH_build.json`` (mirroring
+``serve_sweep.py``'s BENCH_serve.json) so the construction-perf trajectory is
+tracked PR over PR: per dataset, build seconds / label ints / labels-per-sec
+for the wave engine vs the scalar reference builder, plus the byte-identity
+check between the two.
+
+  PYTHONPATH=src python -m benchmarks.run --only construction_time
+  PYTHONPATH=src python -m benchmarks.build_sweep          # JSON only
+  PYTHONPATH=src python -m benchmarks.run --quick          # smoke mode
+"""
 from __future__ import annotations
+
+import json
+import time
 
 from benchmarks.common import (
     HL_LARGE_OK,
@@ -12,14 +26,87 @@ from benchmarks.common import (
     time_once,
 )
 
+# (dataset, scale, reps) for the engine-vs-reference record.  Scales are
+# chosen so the reference build takes seconds (stable ratios) while the whole
+# sweep stays CPU-tractable; citeseerx is the deliberately engine-hostile row
+# (dense layered reachability -> tiny waves -> impl="auto" routes to the
+# reference builder).
+BUILD_COMPARE = [
+    ("citeseer", 0.15, 2),
+    ("mapped_100K", 0.12, 2),
+    ("uniprotenc_22m", 0.03, 2),
+    ("uniprotenc_100m", 0.005, 2),
+    ("citeseerx", 0.005, 1),
+]
+BUILD_COMPARE_QUICK = [("citeseer", 0.02, 1)]
 
-def run(small_methods=None, large_methods=None, *, out=print):
+
+def _best_of(fn, reps: int):
+    best_dt, out = time_once(fn)
+    for _ in range(reps - 1):
+        dt, out = time_once(fn)
+        best_dt = min(best_dt, dt)
+    return best_dt, out
+
+
+def _engine_vs_reference(out=print, quick: bool = False) -> dict:
+    """The tracked record: auto-engine vs scalar reference, same graph."""
+    from repro.core.distribution import distribution_labeling
+
+    datasets = {}
+    out("# build_engine_vs_reference (-> BENCH_build.json)")
+    out("name,us_per_call,derived")
+    for ds, scale, reps in (BUILD_COMPARE_QUICK if quick else BUILD_COMPARE):
+        g = load_dataset(ds, scale=scale)
+        t_ref, o_ref = _best_of(lambda: distribution_labeling(g, impl="reference"), reps)
+        t_eng, o_eng = _best_of(lambda: distribution_labeling(g, impl="auto"), reps)
+        ints = o_ref.total_label_size
+        match = (
+            o_ref.L_out.tobytes() == o_eng.L_out.tobytes()
+            and o_ref.L_in.tobytes() == o_eng.L_in.tobytes()
+        )
+        speedup = t_ref / t_eng if t_eng > 0 else float("inf")
+        key = f"{ds}@{scale}"
+        datasets[key] = {
+            "n": g.n,
+            "m": g.m,
+            "reps": reps,
+            "reference": {
+                "seconds": round(t_ref, 4),
+                "label_ints": ints,
+                "labels_per_sec": round(ints / t_ref),
+            },
+            "engine": {
+                "impl": getattr(o_eng, "build_impl", "?"),
+                "seconds": round(t_eng, 4),
+                "label_ints": o_eng.total_label_size,
+                "labels_per_sec": round(o_eng.total_label_size / t_eng),
+            },
+            "speedup": round(speedup, 3),
+            "labels_match_reference": bool(match),
+        }
+        out(csv_row(
+            f"build/{key}/engine-vs-ref", t_eng * 1e6,
+            f"ref_s={t_ref:.3f};eng_s={t_eng:.3f};speedup={speedup:.2f}x;"
+            f"impl={getattr(o_eng, 'build_impl', '?')};identical={match}",
+        ))
+    return datasets
+
+
+def run(small_methods=None, large_methods=None, *, out=print,
+        quick: bool = False, json_out: str | None = None):
+    t0 = time.time()
+    datasets = _engine_vs_reference(out=out, quick=quick)
+
     out("# table4_construction_small (paper Table 4)")
     out("name,us_per_call,derived")
-    for ds in SMALL_DATASETS:
+    small = SMALL_DATASETS[:2] if quick else SMALL_DATASETS
+    for ds in small:
         g = load_dataset(ds, scale=1.0)
         for name, (builder, _) in METHODS.items():
             if name == "BFS":
+                continue
+            if quick and name not in ("DL", "DL-ref", "GRAIL"):
                 continue
             if small_methods and name not in small_methods:
                 continue
@@ -30,26 +117,62 @@ def run(small_methods=None, large_methods=None, *, out=print):
             except MemoryError:
                 out(csv_row(f"build/{ds}/{name}", float("nan"), "OOM"))
 
-    out("# table7_construction_large (paper Table 7; scaled analogues)")
-    out("name,us_per_call,derived")
-    for ds in LARGE_DATASETS:
-        scale = LARGE_SCALE[ds]
-        g = load_dataset(ds, scale=scale)
-        for name in ("GRAIL", "INTERVAL", "HL", "DL"):
-            if large_methods and name not in large_methods:
-                continue
-            if name == "HL" and ds not in HL_LARGE_OK:
-                out(csv_row(f"build/{ds}@{scale}/{name}", float("nan"),
-                            "skipped(hub-pairs; paper Table 7 also dashes HL here)"))
-                continue
-            builder = METHODS[name][0]
-            try:
-                dt, idx = time_once(lambda b=builder: b(g))
-                out(csv_row(f"build/{ds}@{scale}/{name}", dt * 1e6,
-                            f"n={g.n};m={g.m};size_ints={idx.index_size_ints}"))
-            except MemoryError:
-                out(csv_row(f"build/{ds}@{scale}/{name}", float("nan"), "OOM"))
+    if not quick:
+        out("# table7_construction_large (paper Table 7; scaled analogues)")
+        out("name,us_per_call,derived")
+        for ds in LARGE_DATASETS:
+            scale = LARGE_SCALE[ds]
+            g = load_dataset(ds, scale=scale)
+            for name in ("GRAIL", "INTERVAL", "HL", "DL"):
+                if large_methods and name not in large_methods:
+                    continue
+                if name == "HL" and ds not in HL_LARGE_OK:
+                    out(csv_row(f"build/{ds}@{scale}/{name}", float("nan"),
+                                "skipped(hub-pairs; paper Table 7 also dashes HL here)"))
+                    continue
+                builder = METHODS[name][0]
+                try:
+                    dt, idx = time_once(lambda b=builder: b(g))
+                    out(csv_row(f"build/{ds}@{scale}/{name}", dt * 1e6,
+                                f"n={g.n};m={g.m};size_ints={idx.index_size_ints}"))
+                except MemoryError:
+                    out(csv_row(f"build/{ds}@{scale}/{name}", float("nan"), "OOM"))
+
+    if json_out:
+        _write_json(datasets, quick, time.time() - t0, json_out, out=out)
+
+
+def _write_json(datasets: dict, quick: bool, elapsed: float, json_out: str, out=print):
+    import jax
+
+    speedups = {k: v["speedup"] for k, v in datasets.items()
+                if v["engine"]["impl"] == "wave"}
+    payload = {
+        "quick": quick,
+        "jax_platform": jax.default_backend(),
+        "numpy": __import__("numpy").__version__,
+        "note": ("engine impl='auto' picks the wave/bitset builder where "
+                 "it pays and the scalar reference otherwise; "
+                 "labels are byte-identical either way"),
+        "datasets": datasets,
+        "speedup_summary": {
+            "wave_datasets_ge_3x": sorted(k for k, s in speedups.items() if s >= 3.0),
+            "max_wave_speedup": max(speedups.values(), default=None),
+            "bench_seconds": round(elapsed, 1),
+        },
+    }
+    with open(json_out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    out(f"# wrote {json_out}")
+
+
+def _engine_vs_reference_json(json_out: str, quick: bool = False, out=print):
+    """JSON-only entry point (benchmarks/build_sweep.py)."""
+    t0 = time.time()
+    datasets = _engine_vs_reference(out=out, quick=quick)
+    _write_json(datasets, quick, time.time() - t0, json_out, out=out)
 
 
 if __name__ == "__main__":
-    run()
+    run(json_out="BENCH_build.json")

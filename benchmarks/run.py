@@ -2,8 +2,14 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only query_time
+  PYTHONPATH=src python -m benchmarks.run --quick    # smoke mode
 
-Prints ``name,us_per_call,derived`` CSV sections.
+Prints ``name,us_per_call,derived`` CSV sections.  The construction section
+also writes machine-readable ``BENCH_build.json`` (see
+benchmarks/construction_time.py); ``--quick`` runs a one-dataset smoke of
+the construction section (JSON goes to BENCH_build_quick.json so the
+tracked full-grid record is never clobbered) so CI can exercise the
+harness in seconds, while the full sweep remains this one command.
 """
 from __future__ import annotations
 
@@ -18,16 +24,28 @@ def main() -> None:
         default=None,
         choices=[None, "query_time", "construction_time", "index_size", "kernel_bench"],
     )
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: construction section only, tiny dataset")
+    ap.add_argument("--json-out", default=None,
+                    help="where the construction section writes its JSON record "
+                         "(default: BENCH_build.json, or BENCH_build_quick.json "
+                         "in --quick mode)")
     args = ap.parse_args()
+    if args.json_out is None:
+        args.json_out = "BENCH_build_quick.json" if args.quick else "BENCH_build.json"
 
     from benchmarks import construction_time, index_size, kernel_bench, query_time
 
     sections = {
         "kernel_bench": kernel_bench.run,
         "index_size": index_size.run,
-        "construction_time": construction_time.run,
+        "construction_time": lambda *, out: construction_time.run(
+            out=out, quick=args.quick, json_out=args.json_out
+        ),
         "query_time": query_time.run,
     }
+    if args.quick and not args.only:
+        sections = {"construction_time": sections["construction_time"]}
     flushing = lambda s: print(s, flush=True)
     t0 = time.perf_counter()
     for name, fn in sections.items():

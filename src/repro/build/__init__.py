@@ -1,0 +1,25 @@
+"""Construction engine subsystem.
+
+The serve side got its subsystem in PR 1 (``repro.serve``); this package is
+the construction counterpart.  It owns every way an index gets *built*:
+
+  * ``engine``      — Distribution-Labeling construction engine with pluggable
+                      implementations: the seed scalar path (``impl="reference"``)
+                      and the wave-scheduled bit-parallel path (``impl="wave"``).
+  * ``waves``       — the wave scheduler: groups consecutive vertices of the
+                      §5.2 rank order whose pruned-BFS sweeps provably commute
+                      (mutual unreachability, certified by DFS interval labels).
+  * ``bitset``      — packed uint64/uint32 bitset utilities shared by the host
+                      engine, the device engine, and tests.
+  * ``traverse``    — the scalar pruned-BFS / label-merge helpers shared by the
+                      reference engine and Hierarchical-Labeling.
+  * ``engine_jax``  — the device formulation of the wave sweep (frontier
+                      expansion through the Pallas ``bitset_mm`` OR-AND kernel).
+
+``repro.core.distribution`` and ``repro.core.hierarchy`` are thin wrappers
+over this package.
+"""
+from repro.build.engine import build_distribution_labels
+from repro.build.waves import wave_schedule
+
+__all__ = ["build_distribution_labels", "wave_schedule"]

@@ -1,0 +1,165 @@
+"""Packed-bitset utilities for the construction engine.
+
+The wave engine represents per-wave BFS state as *member masks*: K = ceil(W/64)
+uint64 words per vertex whose bit j says "wave member j".  Frontiers, visited
+sets, prune verdicts, and the per-hop label-membership table are all arrays of
+such words, so every Algorithm-2 prune test collapses to word-wide AND/OR over
+contiguous numpy memory.  This module holds the word-level primitives; the
+sweep logic lives in ``engine.py`` / ``engine_jax.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+_U1 = np.uint64(1)
+_SHIFTS = np.arange(64, dtype=np.uint64)
+
+if hasattr(np, "bitwise_count"):  # numpy >= 2.0
+    def _popcount(x: np.ndarray) -> np.ndarray:
+        return np.bitwise_count(x).astype(np.int64)
+else:  # SWAR fallback for older numpy
+    def _popcount(x: np.ndarray) -> np.ndarray:
+        x = x.astype(np.uint64)
+        x = x - ((x >> _U1) & np.uint64(0x5555555555555555))
+        x = (x & np.uint64(0x3333333333333333)) + ((x >> np.uint64(2)) & np.uint64(0x3333333333333333))
+        x = (x + (x >> np.uint64(4))) & np.uint64(0x0F0F0F0F0F0F0F0F)
+        return ((x * np.uint64(0x0101010101010101)) >> np.uint64(56)).astype(np.int64)
+
+
+def popcount_u64(x: np.ndarray) -> np.ndarray:
+    """Population count; multi-word mask rows ([..., K]) sum over words."""
+    p = _popcount(x)
+    return p.sum(axis=-1) if p.ndim > 1 else p
+
+
+def n_words(width: int) -> int:
+    """uint64 words needed for ``width`` member bits."""
+    return max((width + 63) // 64, 1)
+
+
+def member_bits(width: int, k: int | None = None) -> np.ndarray:
+    """uint64[width, k] — row j holds the one-hot mask of member j.  ``k``
+    defaults to the minimum word count; pass the scratch arrays' word count
+    so masks align with preallocated state."""
+    if k is None:
+        k = n_words(width)
+    bits = np.zeros((width, k), dtype=np.uint64)
+    j = np.arange(width)
+    bits[j, j // 64] = _U1 << (j % 64).astype(np.uint64)
+    return bits
+
+
+def expand_member_bits(
+    bits: np.ndarray, width: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unpack member-mask rows into (row, member, counts) index arrays.
+
+    bits: uint64[k, K] -> (row int64[t], member int64[t], counts int64[k])
+    listing every set bit, row-major: all members of bits[0] first
+    (ascending member), then bits[1]…
+
+    Most rows carry a single bit (one member labels the vertex), so those go
+    through an arithmetic fast path; only multi-bit rows pay for the dense
+    bit table.
+    """
+    counts = popcount_u64(bits)
+    if int(counts.max(initial=0)) <= 1:
+        rows = np.flatnonzero(counts)
+        return rows, _single_bit_members(bits[rows]), counts
+    single = counts == 1
+    multi = ~single & (counts > 0)
+    rows_s = np.flatnonzero(single)
+    mem_s = _single_bit_members(bits[rows_s])
+    rows_m = np.flatnonzero(multi)
+    sub = bits[rows_m]
+    table = (sub[:, :, None] >> _SHIFTS[None, None, :]) & _U1
+    r_m, mem_m = np.nonzero(table.reshape(sub.shape[0], -1)[:, :width])
+    # merge, keeping row-major order (each row is single xor multi, and the
+    # stable sort preserves the ascending member order within a row)
+    rows = np.concatenate([rows_s, rows_m[r_m]])
+    members = np.concatenate([mem_s, mem_m.astype(np.int64)])
+    order = np.argsort(rows, kind="stable")
+    return rows[order], members[order], counts
+
+
+def _single_bit_members(sub: np.ndarray) -> np.ndarray:
+    """member index of each single-bit mask row: uint64[r, K] -> int64[r]."""
+    if sub.shape[0] == 0:
+        return np.empty(0, dtype=np.int64)
+    word = np.argmax(sub != 0, axis=1)
+    val = sub[np.arange(sub.shape[0]), word]
+    return word * 64 + _popcount(val - _U1)
+
+
+def masks_to_matrix(masks: np.ndarray, width: int) -> np.ndarray:
+    """uint64[r, K] member masks -> bool[r, width] membership matrix."""
+    table = (masks[:, :, None] >> _SHIFTS[None, None, :]) & _U1
+    return table.reshape(masks.shape[0], -1)[:, :width].astype(bool)
+
+
+def group_or(keys: np.ndarray, words: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """OR-combine mask rows that share a key: the scatter-OR of a frontier.
+
+    keys int64[t], words uint64[t, K] -> (unique_keys_sorted, or_of_rows).
+    This is how duplicate BFS edge hits and shared hops merge without
+    np.ufunc.at.
+    """
+    if keys.size == 0:
+        return keys, words
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    sw = words[order]
+    starts = np.flatnonzero(np.concatenate(([True], sk[1:] != sk[:-1])))
+    return sk[starts], np.bitwise_or.reduceat(sw, starts, axis=0)
+
+
+def csr_gather(
+    indptr: np.ndarray, indices: np.ndarray, verts: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenate the CSR neighbor lists of ``verts`` in one shot.
+
+    Returns (neighbors, seg) where seg[k] is the position in ``verts`` whose
+    adjacency produced neighbors[k] — the vectorized multi-source frontier
+    expansion used by every wave sweep.
+    """
+    starts = indptr[verts]
+    counts = indptr[verts + 1] - starts
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=indices.dtype), np.empty(0, dtype=np.int64)
+    cum = np.cumsum(counts)
+    offs = np.repeat(starts - (cum - counts), counts) + np.arange(total, dtype=np.int64)
+    seg = np.repeat(np.arange(verts.shape[0], dtype=np.int64), counts)
+    return indices[offs], seg
+
+
+def pack_bool_rows_u32(mat: np.ndarray) -> np.ndarray:
+    """bool[n, k] -> uint32[n, ceil(k/32)] with bit (j % 32) of word (j // 32)
+    set iff mat[i, j] — the layout ``kernels/bitset_mm.py`` consumes."""
+    n, k = mat.shape
+    words = (k + 31) // 32
+    padded = np.zeros((n, words * 32), dtype=bool)
+    padded[:, :k] = mat
+    bit = (np.uint32(1) << np.arange(32, dtype=np.uint32))[None, None, :]
+    return (padded.reshape(n, words, 32).astype(np.uint32) * bit).sum(axis=2, dtype=np.uint32)
+
+
+def adjacency_bits_u32(indptr: np.ndarray, indices: np.ndarray, n: int) -> np.ndarray:
+    """CSR -> packed uint32 adjacency rows (row u = out-neighbor bitset),
+    the A operand of one OR-AND frontier-expansion step on device."""
+    dense = np.zeros((n, n), dtype=bool)
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    dense[src, indices] = True
+    return pack_bool_rows_u32(dense)
+
+
+def words_u32_to_u64(words: np.ndarray) -> np.ndarray:
+    """uint32[n, w<=2] member words -> uint64[n, 1] member masks (<= 64
+    members, the device engine's wave cap)."""
+    out = words[:, 0].astype(np.uint64)
+    if words.shape[1] > 1:
+        out = out | (words[:, 1].astype(np.uint64) << np.uint64(32))
+    assert words.shape[1] <= 2, "device wave width > 64 members is unsupported"
+    return out[:, None]

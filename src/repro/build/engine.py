@@ -1,0 +1,457 @@
+"""Distribution-Labeling construction engine (paper §5, Algorithm 2).
+
+Two host implementations of the same algorithm, differentially tested to be
+byte-identical:
+
+``impl="reference"``
+    The seed scalar path: per-vertex pruned BFS with python sets + deque
+    (via the shared ``traverse.pruned_bfs_distribute`` helper).  Kept as the
+    ground-truth implementation.
+
+``impl="wave"``
+    The bit-parallel engine.  The §5.2 rank order is partitioned into
+    *waves* of mutually unreachable vertices (``waves.wave_schedule``); each
+    wave's up-to-256 pruned BFS sweeps run as ONE batched level-synchronous
+    sweep over packed uint64 member masks:
+
+      * frontier / visited state: uint64[n, K] — bit j = "wave member j",
+      * prune test: ``hop_mask`` maps hop rank h -> mask of members whose
+        source label contains h, so Algorithm 2's per-vertex set probe
+        ``L_out(u) ∩ L_in(v_i) != ∅`` becomes one ragged gather of u's
+        label entries plus a word-wide OR-reduce — no per-element set
+        operations,
+      * label append: grouped vectorized writes into ``_LabelStore`` (dense
+        int32 head rows + side lists for the rare deep rows, so a handful
+        of hub labels never force full-matrix growth copies).
+
+    Why waves are exact: within a wave no member reaches another, so no
+    member's append can appear in another member's prune source set (v_i in
+    L_in(v_j) would require v_i -> v_j), and intra-wave ranks cannot occur
+    in any wave-start label.  Hence every prune verdict equals the one the
+    sequential loop would produce, and label *sets* match exactly; rows are
+    sorted once at the end, giving byte-identical finalized labels.
+
+``impl="auto"`` (default) picks "reference" for small graphs — the batched
+sweeps only pay off once there are enough vertices to amortize them — and
+"wave" everywhere else.
+
+The device twin of the wave sweep lives in ``engine_jax.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.build import bitset
+from repro.build.traverse import pruned_bfs_distribute
+from repro.build.waves import wave_schedule
+from repro.core.oracle import ReachabilityOracle, finalize_labels
+from repro.core.order import get_order
+from repro.graph.csr import CSRGraph, INVALID
+
+_PAD_MULTIPLE = 8
+# below this vertex count the scalar reference path wins (numpy dispatch
+# overhead dominates the batched sweeps)
+_AUTO_WAVE_MIN = 4096
+# impl="auto" falls back to the reference builder when the schedule's mean
+# wave is smaller than this — per-wave overhead would dominate
+_AUTO_MIN_AVG_WAVE = 24.0
+
+
+def build_distribution_labels(
+    g: CSRGraph,
+    order: Optional[np.ndarray] = None,
+    order_name: str = "degree_product",
+    impl: str = "auto",
+    max_wave: int = 256,
+) -> ReachabilityOracle:
+    """Build the DL oracle for DAG ``g`` with the selected implementation."""
+    if order is None:
+        order = get_order(g, order_name)
+    order = np.asarray(order, dtype=np.int64)
+    waves = None
+    if impl == "auto":
+        if g.n < _AUTO_WAVE_MIN:
+            impl = "reference"
+        else:
+            # the schedule itself is the profitability probe: dense
+            # high-reachability graphs (true conflicts everywhere) yield
+            # tiny waves that cannot amortize the batched sweeps
+            waves = wave_schedule(
+                g, order, max_wave=max_wave, abort_below_avg=_AUTO_MIN_AVG_WAVE / 3
+            )
+            if waves is None or g.n / waves.shape[0] < _AUTO_MIN_AVG_WAVE:
+                impl, waves = "reference", None
+            else:
+                impl = "wave"
+    if impl in ("reference", "ref"):
+        oracle = _build_reference(g, order)
+        impl = "reference"
+    elif impl in ("wave", "bitset"):
+        oracle = _build_wave(g, order, max_wave=max_wave, waves=waves)
+        impl = "wave"
+    else:
+        raise ValueError(f"unknown construction impl {impl!r}")
+    # breadcrumb for benchmarks/telemetry: which engine actually built this
+    object.__setattr__(oracle, "build_impl", impl)
+    return oracle
+
+
+# ---------------------------------------------------------------------------
+# reference scalar implementation (the seed path)
+# ---------------------------------------------------------------------------
+
+
+def _build_reference(g: CSRGraph, order: np.ndarray) -> ReachabilityOracle:
+    n = g.n
+    g_rev = g.reverse()
+
+    # Python sets give C-speed isdisjoint (the pruning hot path); parallel
+    # lists keep insertion order for the final packed arrays.
+    L_out_sets = [set() for _ in range(n)]
+    L_in_sets = [set() for _ in range(n)]
+    L_out_lists: list[list[int]] = [[] for _ in range(n)]
+    L_in_lists: list[list[int]] = [[] for _ in range(n)]
+
+    visited = np.full(n, -1, dtype=np.int64)  # iteration stamp, avoids clearing
+
+    for it, vi in enumerate(order):
+        vi = int(vi)
+        # reverse BFS: distribute vi into L_out of its ancestors
+        pruned_bfs_distribute(
+            g_rev.indptr, g_rev.indices, vi, L_in_sets[vi],
+            L_out_sets, L_out_lists, visited, 2 * it,
+        )
+        # forward BFS: distribute vi into L_in of its descendants
+        pruned_bfs_distribute(
+            g.indptr, g.indices, vi, L_out_sets[vi],
+            L_in_sets, L_in_lists, visited, 2 * it + 1,
+        )
+
+    return finalize_labels(L_out_lists, L_in_lists, hop_rank=_hop_rank(order, n))
+
+
+# ---------------------------------------------------------------------------
+# wave-scheduled bitset implementation
+# ---------------------------------------------------------------------------
+
+
+def _hop_rank(order: np.ndarray, n: int) -> np.ndarray:
+    """rank[order[i]] = i — the rank-space remap shared by all impls."""
+    hop_rank = np.empty(n, dtype=np.int32)
+    hop_rank[order] = np.arange(n, dtype=np.int32)
+    return hop_rank
+
+
+class _LabelStore:
+    """Ragged rank-space label rows under construction.
+
+    Dense int32[n, cap] head rows (cap grows geometrically up to DEEP_CAP)
+    hold columns < len; a few *deep* rows (hub labels can reach hundreds of
+    hops while the average stays single-digit) spill their tail into python
+    lists so they never force O(n x max_len) matrix growth.  No pad values
+    anywhere: every reader walks columns < len.
+    """
+
+    DEEP_CAP = 64
+
+    def __init__(self, n: int):
+        self.n = n
+        self.mat = np.empty((n, _PAD_MULTIPLE), dtype=np.int32)
+        self.lens = np.zeros(n, dtype=np.int32)
+        self.deep: Dict[int, List[int]] = {}
+
+    # -- writes ---------------------------------------------------------
+
+    def append(self, verts: np.ndarray, counts: np.ndarray, vals: np.ndarray) -> None:
+        """Append ``counts[k]`` rank values to row verts[k] (vals row-major)."""
+        row_lens = self.lens[verts].astype(np.int64)
+        new_lens = row_lens + counts
+        need = int(new_lens.max())
+        if need > self.mat.shape[1] and self.mat.shape[1] < self.DEEP_CAP:
+            cap = self.mat.shape[1]
+            while cap < min(need, self.DEEP_CAP):
+                cap *= 2
+            grown = np.empty((self.n, cap), dtype=np.int32)
+            grown[:, : self.mat.shape[1]] = self.mat
+            self.mat = grown
+        if need > self.DEEP_CAP:
+            shallow = new_lens <= self.DEEP_CAP
+            if not shallow.all():
+                self._append_deep(verts, counts, vals, shallow)
+                if not shallow.any():
+                    return
+                keep = np.repeat(shallow, counts)
+                verts, counts, row_lens = verts[shallow], counts[shallow], row_lens[shallow]
+                vals = vals[keep]
+        if int(counts.max()) == 1:  # common case: one member labels each vertex
+            self.mat[verts, row_lens] = vals
+            self.lens[verts] += 1
+            return
+        total = int(counts.sum())
+        v_rep = np.repeat(verts, counts)
+        cum = np.cumsum(counts)
+        within = np.arange(total, dtype=np.int64) - np.repeat(cum - counts, counts)
+        self.mat[v_rep, np.repeat(row_lens, counts) + within] = vals
+        self.lens[verts] += counts.astype(np.int32)
+
+    def _append_deep(self, verts, counts, vals, shallow) -> None:
+        """Slow path for rows crossing/beyond DEEP_CAP (a handful per build)."""
+        offs = np.concatenate(([0], np.cumsum(counts)))
+        for k in np.flatnonzero(~shallow):
+            v = int(verts[k])
+            row_vals = vals[offs[k] : offs[k + 1]].tolist()
+            ln = int(self.lens[v])
+            tail = self.deep.setdefault(v, [])
+            room = self.DEEP_CAP - ln
+            if room > 0:  # fill the dense head first
+                self.mat[v, ln : self.DEEP_CAP] = row_vals[:room]
+                row_vals = row_vals[room:]
+            tail.extend(row_vals)
+            self.lens[v] += counts[k]
+
+    # -- reads ----------------------------------------------------------
+
+    def row(self, v: int) -> np.ndarray:
+        """Full label row of one vertex (deep tail included)."""
+        ln = int(self.lens[v])
+        head = self.mat[v, : min(ln, self.DEEP_CAP)]
+        if ln <= self.DEEP_CAP:
+            return head
+        return np.concatenate([head, np.asarray(self.deep[v], dtype=np.int32)])
+
+    def ragged_entries(self, verts: np.ndarray):
+        """(values int32[t], lens int64[k]) — concatenated label entries of
+        ``verts`` in order, deep tails included."""
+        lens = self.lens[verts].astype(np.int64)
+        head_lens = np.minimum(lens, self.DEEP_CAP) if self.deep else lens
+        total = int(head_lens.sum())
+        cum = np.cumsum(head_lens)
+        col = np.arange(total, dtype=np.int64) - np.repeat(cum - head_lens, head_lens)
+        vals = self.mat[np.repeat(verts, head_lens), col]
+        if self.deep and (lens > self.DEEP_CAP).any():
+            parts: List[np.ndarray] = []
+            prev = 0
+            for k in np.flatnonzero(lens > self.DEEP_CAP):
+                parts.append(vals[prev : int(cum[k])])
+                parts.append(np.asarray(self.deep[int(verts[k])], dtype=np.int32))
+                prev = int(cum[k])
+            parts.append(vals[prev:])
+            vals = np.concatenate(parts)
+        return vals, lens
+
+    def pruned_or(self, frontier: np.ndarray, hop_mask: np.ndarray) -> np.ndarray:
+        """Member masks pruned[f] = OR_{h in L(frontier[f])} hop_mask[h],
+        gathered raggedly so cost tracks actual label ints, not row width."""
+        lens = self.lens[frontier].astype(np.int64)
+        out = np.zeros((frontier.shape[0], hop_mask.shape[1]), dtype=np.uint64)
+        head_lens = np.minimum(lens, self.DEEP_CAP) if self.deep else lens
+        total = int(head_lens.sum())
+        if total:
+            nz = head_lens > 0
+            rows = frontier[nz]
+            ln = head_lens[nz]
+            cum = np.cumsum(ln)
+            col = np.arange(int(cum[-1]), dtype=np.int64) - np.repeat(cum - ln, ln)
+            hits = hop_mask[self.mat[np.repeat(rows, ln), col]]  # [t, K]
+            out[nz] = np.bitwise_or.reduceat(hits, cum - ln, axis=0)
+        if self.deep:
+            for k in np.flatnonzero(lens > self.DEEP_CAP):  # rare deep rows
+                tail = np.asarray(self.deep[int(frontier[k])], dtype=np.int64)
+                out[k] |= np.bitwise_or.reduce(hop_mask[tail], axis=0)
+        return out
+
+    # -- finalize -------------------------------------------------------
+
+    def finalize(self, start: int = 0, stop: Optional[int] = None) -> np.ndarray:
+        """Sort rows [start, stop) ascending, pack into the reference padding
+        (multiple of 8, min 8, INVALID-padded) — byte-compatible with
+        ``finalize_labels``.  The range lets one store hold both label sides
+        (the fused sweep's role-split layout)."""
+        stop = self.n if stop is None else stop
+        lens = self.lens[start:stop]
+        mat = self.mat[start:stop]
+        k = stop - start
+        lmax = int(lens.max()) if k else 1
+        width = max(
+            ((max(lmax, 1) + _PAD_MULTIPLE - 1) // _PAD_MULTIPLE) * _PAD_MULTIPLE,
+            _PAD_MULTIPLE,
+        )
+        out = np.full((k, width), INVALID, dtype=np.int32)
+        # sort rows bucketed by length so short rows (the vast majority)
+        # don't pay for the width a few deep rows force
+        lo = 0
+        b = _PAD_MULTIPLE
+        cols = np.arange(width, dtype=np.int32)
+        lens64 = lens.astype(np.int64)
+        big = np.int32(self.n)  # sorts past every rank
+        while lo < min(lmax, self.DEEP_CAP):
+            sel = np.flatnonzero((lens64 > lo) & (lens64 <= min(b, self.DEEP_CAP)))
+            if sel.size:
+                w = min(b, self.DEEP_CAP)
+                in_row = cols[None, :w] < lens64[sel, None]
+                sub = np.where(in_row, mat[sel[:, None], cols[None, :w]], big)
+                sub.sort(axis=1)
+                out[sel[:, None], cols[None, :w]] = np.where(in_row, sub, INVALID)
+            lo = b
+            b *= 2
+        for v in self.deep:  # rare deep rows, one by one
+            if start <= v < stop:
+                out[v - start, : lens64[v - start]] = np.sort(self.row(v))
+        return out
+
+
+def _wave_sweep(
+    members_c: np.ndarray,    # int64[2W] role-split ids: rev members + fwd (+n)
+    ranks_c: np.ndarray,      # int32[2W] their global ranks (duplicated)
+    hop_row_ids: np.ndarray,  # int64[2W] store rows feeding each BFS's prune test
+    extra_hop_keys: np.ndarray,  # int64[W] wave ranks (fwd prune sets include v_j)
+    store: _LabelStore,       # role-split labels: rows < n L_out, rows >= n L_in
+    indptr: np.ndarray,       # combined CSR: rev graph rows then fwd (+n) rows
+    indices: np.ndarray,
+    hop_mask: np.ndarray,     # uint64[n + 1, K] scratch, zeros on entry/exit
+    visited: np.ndarray,      # uint64[2n, K] scratch, zeros on entry/exit
+) -> None:
+    """Both directions of Algorithm 2 for a whole wave, fused: the reverse
+    sweeps run in the [0, n) half of the role-split graph, the forward
+    sweeps in [n, 2n), with disjoint member bits — one level loop drives up
+    to 2 * max_wave pruned BFS at once."""
+    w2 = members_c.shape[0]
+    w = w2 // 2
+    mbits = bitset.member_bits(w2, hop_mask.shape[1])  # uint64[2W, K]
+
+    # hop_mask[h] = mask of member BFS whose prune set contains hop h: the
+    # reverse BFS of v_j prunes on L_in(v_j) (store row n + v_j), the
+    # forward BFS on L_out(v_j) ∪ {rank_j} (store row v_j + an extra key —
+    # v_j itself joins L_out(v_j) during this very wave).  Hop keys live in
+    # one rank space, but member bits are disjoint across roles, so a single
+    # table serves both; foreign-role bits are masked off by fbits.  Members
+    # may share hops (a common high-rank ancestor), so the scatter must OR.
+    hop_vals, hop_lens = store.ragged_entries(hop_row_ids)
+    hm_keys, hm_bits = bitset.group_or(
+        np.concatenate([hop_vals, extra_hop_keys]),  # int32 + int64 upcasts
+        np.concatenate([mbits[np.repeat(np.arange(w2), hop_lens)], mbits[w:]]),
+    )
+    hop_mask[hm_keys] = hm_bits
+
+    visited[members_c] = mbits
+    touched = [members_c]
+
+    # level 0 specialization: every member labels itself (the self prune
+    # test L_out(v) ∩ L_in(v) is empty in a DAG) and expands — skip the
+    # generic prune/expand machinery for it
+    store.append(members_c, np.ones(w2, dtype=np.int64), ranks_c)
+    nbrs0, seg0 = bitset.csr_gather(indptr, indices, members_c)
+    if nbrs0.size == 0:
+        visited[members_c] = 0
+        hop_mask[hm_keys] = 0
+        return
+    uniq0, obits0 = bitset.group_or(nbrs0, mbits[seg0])
+    new0 = obits0 & ~visited[uniq0]
+    keep0 = new0.any(axis=1)
+    frontier = uniq0[keep0]
+    fbits = new0[keep0]
+    visited[frontier] |= fbits
+    touched.append(frontier)
+
+    while frontier.size:
+        # prune test, whole frontier at once: OR the member masks of every
+        # frontier vertex's current label entries.  Intra-wave appends can
+        # appear in rows, but only the static wave-start verdict bits ever
+        # intersect fbits (see waves.py for why).
+        pruned = store.pruned_or(frontier, hop_mask)
+        lab = fbits & ~pruned
+        active = lab.any(axis=1)
+        if not active.any():
+            break
+        v_lab = frontier[active]
+        bits = lab[active]
+
+        # label append: expand member masks to (vertex, member) pairs —
+        # row-major, so values per row arrive member- (= rank-) ascending
+        _, member, counts = bitset.expand_member_bits(bits, w2)
+        store.append(v_lab, counts, ranks_c[member])
+
+        # expansion: only labeled (un-pruned) vertices expand, carrying
+        # exactly their labeled member bits
+        nbrs, seg = bitset.csr_gather(indptr, indices, v_lab)
+        if nbrs.size == 0:
+            break
+        uniq, obits = bitset.group_or(nbrs, bits[seg])  # indices already int64
+        new = obits & ~visited[uniq]
+        keep = new.any(axis=1)
+        frontier = uniq[keep]
+        fbits = new[keep]
+        visited[frontier] |= fbits
+        touched.append(frontier)
+
+    # scratch cleanup (exactly the entries we wrote)
+    visited[np.concatenate(touched)] = 0
+    hop_mask[hm_keys] = 0
+
+
+def _build_wave(
+    g: CSRGraph,
+    order: np.ndarray,
+    max_wave: int = 256,
+    waves: Optional[np.ndarray] = None,
+) -> ReachabilityOracle:
+    n = g.n
+    if n == 0:
+        return finalize_labels([], [], hop_rank=np.empty(0, dtype=np.int32))
+    g_rev = g.reverse()
+    if waves is None:
+        waves = wave_schedule(g, order, max_wave=max_wave)
+    ranks_of = np.arange(n, dtype=np.int32)
+
+    # role-split layout: ids [0, n) run the reverse BFS over the reverse
+    # graph and write L_out; ids [n, 2n) run the forward BFS over the
+    # forward graph and write L_in.  One combined CSR + one label store let
+    # a single level loop drive both directions of a wave.
+    indptr = g.indptr.astype(np.int64)
+    indices = g.indices.astype(np.int64)
+    r_indptr = g_rev.indptr.astype(np.int64)
+    r_indices = g_rev.indices.astype(np.int64)
+    indptr_c = np.concatenate([r_indptr, r_indptr[-1] + indptr[1:]])
+    indices_c = np.concatenate([r_indices, indices + n])
+
+    k_words = bitset.n_words(2 * max_wave)
+    store = _LabelStore(2 * n)
+    hop_mask = np.zeros((n + 1, k_words), dtype=np.uint64)
+    visited = np.zeros((2 * n, k_words), dtype=np.uint64)
+
+    base = 0
+    for wlen in waves:
+        wlen = int(wlen)
+        members = order[base : base + wlen]
+        ranks = ranks_of[base : base + wlen]
+        members_c = np.concatenate([members, members + n])
+        ranks_c = np.concatenate([ranks, ranks])
+        # reverse BFS prunes on L_in rows (store n + v), forward on L_out
+        # rows (store v) plus the member's own rank
+        hop_row_ids = np.concatenate([members + n, members])
+        _wave_sweep(
+            members_c, ranks_c, hop_row_ids, ranks.astype(np.int64),
+            store, indptr_c, indices_c, hop_mask, visited,
+        )
+        base += wlen
+
+    return ReachabilityOracle(
+        L_out=store.finalize(0, n),
+        L_in=store.finalize(n, 2 * n),
+        out_len=store.lens[:n].copy(),
+        in_len=store.lens[n:].copy(),
+        hop_rank=_hop_rank(order, n),
+    )
+
+
+def sort_label_rows(mat: np.ndarray) -> np.ndarray:
+    """Canonicalize INVALID-padded label rows: ascending values, pads last.
+
+    Shared by the device builders (``core/distribution_jax.py``,
+    ``build/engine_jax.py``) whose scatters append out of order.
+    """
+    big = np.iinfo(np.int32).max
+    key = np.sort(np.where(mat == INVALID, big, mat), axis=1)
+    return np.where(key == big, INVALID, key).astype(np.int32)

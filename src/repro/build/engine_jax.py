@@ -1,0 +1,156 @@
+"""Device formulation of the wave-batched construction sweep.
+
+The host engine (``engine.py``) and this module share one dataflow per wave
+and per direction:
+
+  1. prune:   pruned[u] = OR_{h in L(u)} hop_mask[h]      (gather + OR-reduce)
+  2. reach:   masked multi-source BFS from the wave members where pruned
+              member-bits do not expand                    (OR-AND semiring)
+  3. append:  labeled = visited & ~pruned -> rank appends  (output-sized)
+
+On device, step 2 is exactly the Pallas ``kernels/bitset_mm.py`` OR-AND
+kernel: one BFS level for all <= 64 member BFS sweeps is
+``bitset_mm(adjacency_bits, frontier_words)`` over packed uint32 words.
+Step 1 is a dense gather over the label matrix — the same membership-LUT
+dataflow as ``core/distribution_jax.py``'s per-vertex sweep, batched over
+the wave.  Because prune verdicts within a wave are static (no member's
+append can flip another member's test — see ``waves.py``), the whole wave
+reaches fixpoint on device with zero host round-trips per level.
+
+This builder materializes packed adjacency bits (n x n/32), so it is the
+*small-graph demonstrator* of the device dataflow; the production-scale
+sharded build remains ``distribution_jax.build_sweep`` (vertex-sharded,
+edge-list expansion).  Both produce labels byte-identical to the host
+engine's — asserted in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.build import bitset
+from repro.build.engine import _hop_rank, _LabelStore
+from repro.build.waves import wave_schedule
+from repro.core.oracle import ReachabilityOracle, finalize_labels
+from repro.core.order import get_order
+from repro.graph.csr import CSRGraph
+
+
+def _padded_rows(store: _LabelStore, pad: int) -> np.ndarray:
+    """Materialize the store's ragged label rows as a dense pad-filled matrix
+    (the device gather operand); columns >= len become ``pad``."""
+    lens = store.lens
+    used = max(int(lens.max()), 1)
+    out = np.full((store.n, used), pad, dtype=np.int32)
+    head = min(used, store.mat.shape[1])
+    cols = np.arange(head, dtype=np.int32)
+    out[:, :head] = np.where(cols[None, :] < lens[:, None], store.mat[:, :head], pad)
+    for v in store.deep:
+        row = store.row(v)
+        out[v, : row.shape[0]] = row
+    return out
+
+
+def _wave_sweep_device(
+    members: np.ndarray,
+    ranks: np.ndarray,
+    src: _LabelStore,       # label rows feeding the prune test
+    tgt: _LabelStore,       # labels being distributed into
+    adj_bits,               # jnp uint32[n, ceil(n/32)] expansion operand
+    n: int,
+    interpret: bool,
+) -> None:
+    """One direction of Algorithm 2 for a whole wave, frontier expansion on
+    device through the OR-AND kernel."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import bitset_mm
+
+    w = members.shape[0]
+    wm = (w + 31) // 32
+    pad = n
+
+    # hop_mask[h] = uint32 member words of members whose prune row contains h
+    hop_mask = np.zeros((n + 1, wm), dtype=np.uint32)
+    word = np.arange(w) // 32
+    bit = np.uint32(1) << (np.arange(w, dtype=np.uint32) % np.uint32(32))
+    for j in range(w):  # W <= 64 rows, host-side setup
+        hops = src.row(int(members[j]))
+        hop_mask[hops, word[j]] |= bit[j]
+
+    # 1. static prune verdicts: gather every vertex's label row, OR the words
+    hm = jnp.asarray(hop_mask)
+    rows = jnp.asarray(_padded_rows(tgt, pad))
+    pruned = jnp.bitwise_or.reduce(hm[rows], axis=1)  # [n, wm]
+
+    # 2. fixpoint masked reach: one bitset_mm per BFS level, all members at once
+    start = np.zeros((n, wm), dtype=np.uint32)
+    start[members, word] = bit
+    visited = jnp.asarray(start)
+    while True:
+        expand = visited & ~pruned
+        new = visited | bitset_mm(adj_bits, expand, interpret=interpret)
+        if not bool(jnp.any(new != visited)):
+            break
+        visited = new
+
+    # 3. labeled = visited & ~pruned -> host append (output-sized traffic)
+    labeled = np.asarray(visited & ~pruned)
+    masks = bitset.words_u32_to_u64(labeled)
+    verts = np.flatnonzero(masks.any(axis=1))
+    if verts.size == 0:
+        return
+    bits = masks[verts]
+    _, member, counts = bitset.expand_member_bits(bits, w)
+    tgt.append(verts, counts, ranks[member])
+
+
+def distribution_labeling_wave_jax(
+    g: CSRGraph,
+    order: Optional[np.ndarray] = None,
+    order_name: str = "degree_product",
+    max_wave: int = 64,
+    interpret: bool | None = None,
+) -> ReachabilityOracle:
+    """Full device wave build (host loop over waves, device sweeps)."""
+    import jax
+    import jax.numpy as jnp
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = g.n
+    if n == 0:
+        return finalize_labels([], [], hop_rank=np.empty(0, dtype=np.int32))
+    if order is None:
+        order = get_order(g, order_name)
+    order = np.asarray(order, dtype=np.int64)
+    g_rev = g.reverse()
+    waves = wave_schedule(g, order, max_wave=max_wave)
+
+    # reverse pass expands u -> in-neighbors w (edge w->u): A[w, u] = w->u,
+    # i.e. packed OUT-neighbor rows; forward pass symmetric with the reverse
+    # graph's rows
+    a_out = jnp.asarray(bitset.adjacency_bits_u32(g.indptr, g.indices, n))
+    a_in = jnp.asarray(bitset.adjacency_bits_u32(g_rev.indptr, g_rev.indices, n))
+
+    L_out = _LabelStore(n)
+    L_in = _LabelStore(n)
+    ranks_of = np.arange(n, dtype=np.int32)
+
+    base = 0
+    for wlen in waves:
+        wlen = int(wlen)
+        members = order[base : base + wlen]
+        ranks = ranks_of[base : base + wlen]
+        _wave_sweep_device(members, ranks, L_in, L_out, a_out, n, interpret)
+        _wave_sweep_device(members, ranks, L_out, L_in, a_in, n, interpret)
+        base += wlen
+
+    return ReachabilityOracle(
+        L_out=L_out.finalize(),
+        L_in=L_in.finalize(),
+        out_len=L_out.lens,
+        in_len=L_in.lens,
+        hop_rank=_hop_rank(order, n),
+    )

@@ -1,0 +1,93 @@
+"""Scalar traversal + label-append helpers shared across construction code.
+
+Before this module existed, the pruned-BFS/label-append loop was written out
+twice in ``core/distribution.py`` (forward + reverse pass) and the k-hop /
+label-inherit loops twice more in ``core/hierarchy.py`` and
+``core/backbone.py``.  They now live here, once; both labeling algorithms and
+the backbone builder import from this module.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Sequence, Set
+
+import numpy as np
+
+
+def pruned_bfs_distribute(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    source: int,
+    source_label_set: Set[int],
+    target_label_sets: List[Set[int]],
+    target_label_lists: List[List[int]],
+    visited: np.ndarray,
+    stamp: int,
+) -> None:
+    """One pruned-BFS pass of Algorithm 2 (paper §5).
+
+    Walk the graph given by (indptr, indices) from ``source``; at each vertex
+    ``u``, if ``source_label_set`` already intersects ``target_label_sets[u]``
+    the pair is covered through a higher-ranked hop — prune ``u`` (no label,
+    no expansion).  Otherwise append ``source`` to u's label and expand.
+
+    The reverse pass of Distribution-Labeling calls this with the reverse CSR
+    and (L_in(v_i), L_out); the forward pass with the forward CSR and
+    (L_out(v_i), L_in).  ``visited`` is an iteration-stamp array shared across
+    calls so it never needs clearing.
+    """
+    dq = deque([source])
+    visited[source] = stamp
+    while dq:
+        u = dq.popleft()
+        if not source_label_set.isdisjoint(target_label_sets[u]):
+            continue  # covered by a higher hop: prune u (and paths through it)
+        target_label_sets[u].add(source)
+        target_label_lists[u].append(source)
+        for w in indices[indptr[u] : indptr[u + 1]]:
+            if visited[w] != stamp:
+                visited[w] = stamp
+                dq.append(int(w))
+
+
+def khop_out(g, v: int, k: int) -> Set[int]:
+    """Vertices within <= k forward steps of v (excluding v).
+
+    Shared by the backbone builder (Formulas 1/2 candidate sets) and
+    Hierarchical-Labeling (Formula 3 core labels + backbone sets).
+    """
+    seen = {v}
+    frontier = [v]
+    out: Set[int] = set()
+    for _ in range(k):
+        nxt = []
+        for u in frontier:
+            for w in g.out_neighbors(u):
+                w = int(w)
+                if w not in seen:
+                    seen.add(w)
+                    out.add(w)
+                    nxt.append(w)
+        frontier = nxt
+    return out
+
+
+def inherit_labels(
+    gv: int,
+    neighbor_globals: Sequence[int],
+    backbone_locals: Sequence[int],
+    to_global: np.ndarray,
+    label_sets: List[Set[int]],
+) -> Set[int]:
+    """One side of HL's level-wise labeling (Formulas 4/5):
+
+        L(v) = {v}  u  N1(v|G_i)  u  U_{u in B(v)} L(u)
+
+    ``core/hierarchy.py`` previously spelled this out twice (once per
+    direction); both call sites now share this helper.
+    """
+    lab: Set[int] = {gv}
+    lab.update(int(w) for w in neighbor_globals)
+    for u in backbone_locals:
+        lab.update(label_sets[int(to_global[u])])
+    return lab

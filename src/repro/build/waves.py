@@ -1,0 +1,292 @@
+"""Wave scheduler: batch Algorithm 2 iterations that provably commute.
+
+Distribution-Labeling's outer loop is sequential in the §5.2 rank order, but
+consecutive iterations commute whenever no wave member can reach another:
+
+  * v_i's reverse pass appends v_i to L_out(u) for ancestors u; that append
+    can only flip v_j's prune test L_out(u) ∩ L_in(v_j) if v_i ∈ L_in(v_j),
+    i.e. v_i -> v_j.
+  * symmetrically for the forward pass and v_j -> v_i.
+
+So a *wave* = a maximal run of consecutive rank-order vertices that are
+pairwise mutually unreachable; the whole wave runs as one batched sweep with
+bit-per-member state and the result is exactly the sequential labeling (the
+engine's differential tests assert byte-identity).
+
+Certification is two-tier, both sides conservative:
+
+1. GRAIL-style DFS intervals (Yildirim et al., PAPERS.md): a DFS of a DAG
+   assigns post-order numbers and ``low[v] = min(post over Reach(v))``; then
+   ``u -> v  ==>  post[v] in [low[u], post[u]]`` for every traversal.  One
+   vectorized all-pairs check refutes most pairs for free.  (Topo levels
+   would add nothing here: they can only *confirm* reachability, never
+   refute an interval false positive.)
+2. When intervals report conflicts, an exact rescue: a budget-bounded
+   multi-source closure BFS propagating one uint64 candidate-bit mask per
+   vertex.  If it completes within budget it yields the *true* pairwise
+   reachability among the candidates (bit a arriving at candidate b means
+   a -> b), turning interval false positives back into full waves.  Sparse
+   graphs — exactly the ones whose BFS regions are tiny and therefore batch
+   well — complete almost every rescue; hub-dominated chunks blow the budget
+   fast and fall back to the interval verdict.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.build import bitset
+from repro.graph.csr import CSRGraph
+
+
+def _reverse_within_rows(indptr: np.ndarray, indices: np.ndarray) -> np.ndarray:
+    """indices with every CSR row's neighbor list reversed (tie-break flip)."""
+    m = indices.shape[0]
+    counts = np.diff(indptr).astype(np.int64)
+    starts = indptr[:-1].astype(np.int64)
+    cum = np.cumsum(counts)
+    pos_in_row = np.arange(m, dtype=np.int64) - np.repeat(cum - counts, counts)
+    dest = np.repeat(starts + counts - 1, counts) - pos_in_row
+    out = np.empty_like(indices)
+    out[dest] = indices
+    return out
+
+
+def dfs_post_low(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    roots: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One DFS sweep over a DAG: (post, low) int64[n].
+
+    post[v] = post-order number; low[v] = min post over Reach(v) (computable
+    at finish time because every out-neighbor of a DAG vertex is already
+    finished).  [low[v], post[v]] contains post[d] for every descendant d and
+    post[v] itself.
+    """
+    n = indptr.shape[0] - 1
+    iptr = indptr.tolist()
+    idx = indices.tolist()
+    post = [0] * n
+    low = [0] * n
+    state = bytearray(n)  # 0 new, 1 open, 2 done
+    t = 0
+    root_iter = range(n) if roots is None else roots.tolist()
+    for r in root_iter:
+        if state[r]:
+            continue
+        state[r] = 1
+        stack = [r]
+        ptr = [iptr[r]]
+        while stack:
+            v = stack[-1]
+            p = ptr[-1]
+            if p < iptr[v + 1]:
+                ptr[-1] = p + 1
+                w = idx[p]
+                if not state[w]:
+                    state[w] = 1
+                    stack.append(w)
+                    ptr.append(iptr[w])
+            else:
+                stack.pop()
+                ptr.pop()
+                lo = t
+                for q in range(iptr[v], iptr[v + 1]):
+                    lw = low[idx[q]]
+                    if lw < lo:
+                        lo = lw
+                post[v] = t
+                low[v] = lo
+                state[v] = 2
+                t += 1
+    return np.asarray(post, dtype=np.int64), np.asarray(low, dtype=np.int64)
+
+
+def dfs_intervals(g: CSRGraph, n_traversals: int = 2) -> Tuple[np.ndarray, np.ndarray]:
+    """(post, low) stacked over traversals: int64[T, n] each.
+
+    Traversal 0 uses natural root/neighbor order; traversal 1 flips both;
+    further traversals use seeded random root/neighbor permutations.  More
+    traversals refute more interval false positives (a pair is only "maybe"
+    if EVERY traversal allows it) — the exact rescue in ``wave_schedule``
+    makes 2 enough in practice.
+    """
+    posts, lows = [], []
+    rng = np.random.default_rng(0x5EED)
+    for t in range(n_traversals):
+        if t == 0:
+            p, l = dfs_post_low(g.indptr, g.indices)
+        elif t == 1:
+            p, l = dfs_post_low(
+                g.indptr,
+                _reverse_within_rows(g.indptr, g.indices),
+                roots=np.arange(g.n - 1, -1, -1),
+            )
+        else:
+            key = rng.random(g.m)
+            row = np.repeat(np.arange(g.n), np.diff(g.indptr))
+            p, l = dfs_post_low(
+                g.indptr,
+                g.indices[np.lexsort((key, row))],
+                roots=rng.permutation(g.n),
+            )
+        posts.append(p)
+        lows.append(l)
+    return np.stack(posts), np.stack(lows)
+
+
+def _interval_conflicts(P: np.ndarray, L: np.ndarray, cand: np.ndarray) -> np.ndarray:
+    """bool[c, c] — conflict[a, b] = some traversal allows a -> b or b -> a."""
+    p = P[:, cand]  # [T, c]
+    l = L[:, cand]
+    maybe = ((p[:, None, :] >= l[:, :, None]) & (p[:, None, :] <= p[:, :, None])).all(axis=0)
+    return maybe | maybe.T
+
+
+def _exact_conflicts(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    cand: np.ndarray,
+    scratch: np.ndarray,
+    budget: int,
+) -> Optional[np.ndarray]:
+    """Exact pairwise reachability among candidates via a multi-source
+    closure BFS with packed candidate-bit masks; None if the edge budget is
+    exhausted (verdict would be unsound when truncated)."""
+    c = cand.shape[0]
+    mbits = bitset.member_bits(c, scratch.shape[1])
+    scratch[cand] = mbits
+    touched = [cand]
+    frontier, fbits = cand, mbits
+    edges = 0
+    completed = True
+    while frontier.size:
+        # budget check BEFORE the gather: a single hub level can carry the
+        # whole graph, and a doomed block must abort cheaply
+        edges += int((indptr[frontier + 1] - indptr[frontier]).sum())
+        if edges > budget:
+            completed = False
+            break
+        nbrs, seg = bitset.csr_gather(indptr, indices, frontier)
+        if nbrs.shape[0] == 0:
+            break
+        uniq, obits = bitset.group_or(nbrs, fbits[seg])  # indices already int64
+        new = obits & ~scratch[uniq]
+        keep = new.any(axis=1)
+        frontier = uniq[keep]
+        fbits = new[keep]
+        scratch[frontier] |= fbits
+        touched.append(frontier)
+    if completed:
+        arrived = scratch[cand] ^ mbits  # bits of OTHER candidates reaching each
+        # conflicts are sparse: unpack only rows that received any bit
+        nz = np.flatnonzero(arrived.any(axis=1))
+        m = np.zeros((c, c), dtype=bool)  # m[b, a] = a -> b
+        if nz.size:
+            m[nz] = bitset.masks_to_matrix(arrived[nz], c)
+        conflict = m | m.T
+    scratch[np.concatenate(touched)] = 0
+    return conflict if completed else None
+
+
+_TRIU_CACHE: list = [np.zeros((0, 0), dtype=bool)]
+
+
+def _triu_mask(c: int) -> np.ndarray:
+    """Cached strict upper-triangle mask view (np.triu allocates per call)."""
+    if _TRIU_CACHE[0].shape[0] < c:
+        size = max(c, 256)
+        _TRIU_CACHE[0] = np.triu(np.ones((size, size), dtype=bool), k=1)
+    return _TRIU_CACHE[0][:c, :c]
+
+
+def _block_waves(conflict: np.ndarray, c: int, max_wave: int, lengths: list) -> None:
+    """Greedily split one block's conflict matrix into consecutive waves."""
+    pos = 0
+    while pos < c:
+        limit = min(max_wave, c - pos)
+        sub = conflict[pos : pos + limit, pos : pos + limit]
+        bad = (sub & _triu_mask(limit)).any(axis=0)  # b conflicts with some a < b
+        nz = np.flatnonzero(bad)
+        wlen = max(int(nz[0]) if nz.size else limit, 1)
+        lengths.append(wlen)
+        pos += wlen
+
+
+def wave_schedule(
+    g: CSRGraph,
+    order: np.ndarray,
+    max_wave: int = 256,
+    block: int = 256,
+    n_traversals: int = 2,
+    intervals: Tuple[np.ndarray, np.ndarray] | None = None,
+    exact_budget: Optional[int] = None,
+    abort_below_avg: Optional[float] = None,
+) -> Optional[np.ndarray]:
+    """Partition ``order`` into consecutive waves of mutually unreachable
+    vertices.  Returns int64[n_waves] wave lengths (summing to len(order));
+    wave k covers order[sum(lengths[:k]) : sum(lengths[:k+1])].
+
+    Block-and-split: one exact closure covers a whole ``block`` of
+    consecutive vertices, and every wave inside the block is carved out of
+    that single conflict matrix.  Larger blocks amortize closure calls but
+    pay more mask words per edge; block == max_wave measures fastest across
+    the bench families.  When a block blows the closure budget (a hub cone
+    is in range), bisect it so the hub lands in a small block alone; if
+    closures keep blowing (closure-hostile graph), a circuit breaker pays
+    once for the DFS intervals and uses them for all remaining fallbacks.
+
+    ``abort_below_avg``: probe mode — once ~4k vertices are scheduled, give
+    up and return None if the mean wave is below the threshold (the caller
+    will not profit from batching; don't pay for the full schedule).
+    """
+    order = np.asarray(order, dtype=np.int64)
+    n_total = order.shape[0]
+    if n_total == 0:
+        return np.empty(0, dtype=np.int64)
+    block = max(block, max_wave)
+    if exact_budget is None:
+        # generous: a completed closure buys exact (maximal) waves, and the
+        # per-block cost is bounded by the budget either way
+        exact_budget = max(131072, 16 * block * max(g.m // max(g.n, 1), 1))
+    indptr = g.indptr.astype(np.int64)
+    indices = g.indices.astype(np.int64)
+    scratch = np.zeros((g.n, bitset.n_words(block)), dtype=np.uint64)
+    iv = intervals
+    blown = 0
+    _BLOW_LIMIT = 64  # circuit breaker: after this many blown closures, pay
+    #                   for the DFS intervals once and stop bisecting
+
+    lengths: list = []
+    i = 0
+    while i < n_total:
+        c = min(block, n_total - i)
+        while True:
+            if c == 1:
+                lengths.append(1)  # a lone vertex is trivially a wave
+                i += 1
+                break
+            cand = order[i : i + c]
+            if iv is not None and blown >= _BLOW_LIMIT:
+                conflict = _interval_conflicts(iv[0], iv[1], cand)
+            else:
+                conflict = _exact_conflicts(indptr, indices, cand, scratch, exact_budget)
+                if conflict is None:  # budget blown: a huge cone is in range
+                    blown += 1
+                    if blown >= _BLOW_LIMIT:
+                        # closure-hostile graph — switch every remaining
+                        # fallback to the interval certificate
+                        if iv is None:
+                            iv = dfs_intervals(g, n_traversals)
+                        c = min(c, max_wave)  # keep interval matrices small
+                        continue
+                    c = c // 2  # bisect: isolate the hub into a small block
+                    continue
+            _block_waves(conflict, c, max_wave, lengths)
+            i += c
+            break
+        if abort_below_avg is not None and i >= 4096 and i / len(lengths) < abort_below_avg:
+            return None
+    return np.asarray(lengths, dtype=np.int64)

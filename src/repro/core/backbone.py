@@ -20,6 +20,7 @@ from typing import Dict, List, Set, Tuple
 
 import numpy as np
 
+from repro.build.traverse import khop_out as _khop_out  # shared traversal helper
 from repro.core.order import degree_product_rank
 from repro.graph.csr import CSRGraph, from_edges
 
@@ -31,24 +32,6 @@ class Backbone:
     vstar: np.ndarray      # int32[k] selected vertex ids (parent-local), sorted
     graph: CSRGraph        # backbone graph over 0..k-1 (backbone-local ids)
     local_of: Dict[int, int]  # parent-local id -> backbone-local id
-
-
-def _khop_out(g: CSRGraph, v: int, k: int) -> Set[int]:
-    """Vertices within <= k forward steps of v (excluding v)."""
-    seen = {v}
-    frontier = [v]
-    out: Set[int] = set()
-    for _ in range(k):
-        nxt = []
-        for u in frontier:
-            for w in g.out_neighbors(u):
-                w = int(w)
-                if w not in seen:
-                    seen.add(w)
-                    out.add(w)
-                    nxt.append(w)
-        frontier = nxt
-    return out
 
 
 def fast_cover(g: CSRGraph, eps: int = 2) -> np.ndarray:

@@ -1,4 +1,4 @@
-"""Distribution-Labeling (paper §5, Algorithm 2).
+"""Distribution-Labeling (paper §5, Algorithm 2) — public entry point.
 
 Process vertices in a total order (default rank: (dout+1)*(din+1) desc).
 For each vertex v_i:
@@ -10,85 +10,34 @@ For each vertex v_i:
     L_in(w) cap L_out(v_i) != empty.
 
 Theorem 3: complete.  Theorem 4: non-redundant (no hop can be removed).
-Worst case O(n(n+m)); output-sensitive in practice — the intersection test
-prunes nearly everything, which is the paper's entire speed story.
 
-This is the host (numpy+sets) fast path used for index *construction*
-(an offline job). The device/sharded formulation lives in
-``distribution_jax.py``; the serve path in ``query.py``.
+Construction is owned by the ``repro.build`` engine: ``impl="wave"``
+(default) runs the wave-scheduled bit-parallel sweep, ``impl="reference"``
+the seed scalar sets+deque path — both produce byte-identical labels (the
+engine's differential tests assert this).  The device/sharded formulation
+lives in ``distribution_jax.py``; the serve path in ``repro.serve``.
 """
 from __future__ import annotations
 
-from collections import deque
 from typing import Optional
 
 import numpy as np
 
-from repro.core.oracle import ReachabilityOracle, finalize_labels
-from repro.core.order import get_order
-from repro.graph.csr import CSRGraph
+from repro.core.oracle import ReachabilityOracle
 
 
 def distribution_labeling(
-    g: CSRGraph,
+    g,
     order: Optional[np.ndarray] = None,
     order_name: str = "degree_product",
+    impl: str = "auto",
+    **engine_kwargs,
 ) -> ReachabilityOracle:
     """Build the oracle for DAG ``g`` (int vertex ids 0..n-1)."""
-    n = g.n
-    g_rev = g.reverse()
-    if order is None:
-        order = get_order(g, order_name)
+    # deferred: repro.core's package init imports this module, while the
+    # engine imports repro.core.oracle — a top-level import would cycle
+    from repro.build.engine import build_distribution_labels
 
-    # Python sets give C-speed isdisjoint (the pruning hot path); parallel
-    # lists keep insertion order for the final packed arrays.
-    L_out_sets = [set() for _ in range(n)]
-    L_in_sets = [set() for _ in range(n)]
-    L_out_lists: list[list[int]] = [[] for _ in range(n)]
-    L_in_lists: list[list[int]] = [[] for _ in range(n)]
-
-    indptr, indices = g.indptr, g.indices
-    r_indptr, r_indices = g_rev.indptr, g_rev.indices
-
-    visited = np.full(n, -1, dtype=np.int64)  # iteration stamp, avoids clearing
-
-    for it, vi in enumerate(order):
-        vi = int(vi)
-        Lin_vi = L_in_sets[vi]
-        Lout_vi = L_out_sets[vi]
-
-        # ---- reverse BFS: distribute vi into L_out of its ancestors ----
-        stamp = 2 * it
-        dq = deque([vi])
-        visited[vi] = stamp
-        while dq:
-            u = dq.popleft()
-            if not Lin_vi.isdisjoint(L_out_sets[u]):
-                continue  # covered by a higher hop: prune u (and paths through it)
-            L_out_sets[u].add(vi)
-            L_out_lists[u].append(vi)
-            for w in r_indices[r_indptr[u] : r_indptr[u + 1]]:
-                if visited[w] != stamp:
-                    visited[w] = stamp
-                    dq.append(int(w))
-
-        # ---- forward BFS: distribute vi into L_in of its descendants ----
-        stamp = 2 * it + 1
-        dq = deque([vi])
-        visited[vi] = stamp
-        while dq:
-            w = dq.popleft()
-            if not Lout_vi.isdisjoint(L_in_sets[w]):
-                continue
-            L_in_sets[w].add(vi)
-            L_in_lists[w].append(vi)
-            for x in indices[indptr[w] : indptr[w + 1]]:
-                if visited[x] != stamp:
-                    visited[x] = stamp
-                    dq.append(int(x))
-
-    # rank space: hop_rank[order[i]] = i — rows come out rank-ordered, so the
-    # serve-path merges hit the highest-ranked (most frequent) hop first
-    hop_rank = np.empty(n, dtype=np.int32)
-    hop_rank[np.asarray(order, dtype=np.int64)] = np.arange(n, dtype=np.int32)
-    return finalize_labels(L_out_lists, L_in_lists, hop_rank=hop_rank)
+    return build_distribution_labels(
+        g, order=order, order_name=order_name, impl=impl, **engine_kwargs
+    )

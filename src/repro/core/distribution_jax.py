@@ -16,6 +16,11 @@ frontier bitmap (all-gather of bool[n]/8 bytes) and the (tiny) label row of
 v_i (broadcast).
 
 The same `build_sweep` is what dryrun.py lowers at production scale.
+
+The wave-batched device formulation — the same prune-gather / masked-reach /
+append dataflow, but batched over up to 64 mutually independent vertices per
+step through the Pallas OR-AND kernel — lives in ``repro.build.engine_jax``;
+both share the row canonicalization below via ``repro.build.engine``.
 """
 from __future__ import annotations
 
@@ -190,17 +195,11 @@ def distribution_labeling_jax(
     if bool(state.overflow):
         raise ValueError(f"label overflow: some row exceeded l_max={l_max}")
 
-    L_out = np.asarray(state.L_out)
-    L_in = np.asarray(state.L_in)
-    # canonicalize rows sorted ascending (INVALID = -1 sorts first; move to end)
-    def _canon(M):
-        key = np.where(M == INVALID, np.iinfo(np.int32).max, M)
-        return np.where(np.sort(key, axis=1) == np.iinfo(np.int32).max, INVALID,
-                        np.sort(key, axis=1)).astype(np.int32)
+    from repro.build.engine import sort_label_rows
 
     return ReachabilityOracle(
-        L_out=_canon(L_out),
-        L_in=_canon(L_in),
+        L_out=sort_label_rows(np.asarray(state.L_out)),
+        L_in=sort_label_rows(np.asarray(state.L_in)),
         out_len=np.asarray(state.out_len),
         in_len=np.asarray(state.in_len),
     )

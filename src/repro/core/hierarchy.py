@@ -22,7 +22,8 @@ from typing import List, Set
 
 import numpy as np
 
-from repro.core.backbone import Backbone, one_side_backbone, _khop_out
+from repro.build.traverse import inherit_labels, khop_out as _khop_out
+from repro.core.backbone import Backbone, one_side_backbone
 from repro.core.distribution import distribution_labeling
 from repro.core.oracle import ReachabilityOracle, finalize_labels
 from repro.graph.csr import CSRGraph
@@ -135,15 +136,11 @@ def hierarchical_labeling(
                 continue  # labeled at a higher level
             gv = int(glob_i[lv])
             b_out, b_in = _backbone_sets(g_i, in_vstar, lv, eps)
-            lo: Set[int] = {gv}
-            lo.update(int(glob_i[w]) for w in g_i.out_neighbors(lv))
-            for u in b_out:
-                lo.update(out_sets[int(glob_i[u])])
-            li: Set[int] = {gv}
-            li.update(int(glob_i[w]) for w in g_i_rev.out_neighbors(lv))
-            for u in b_in:
-                li.update(in_sets[int(glob_i[u])])
-            out_sets[gv] = lo
-            in_sets[gv] = li
+            out_sets[gv] = inherit_labels(
+                gv, glob_i[g_i.out_neighbors(lv)], b_out, glob_i, out_sets
+            )
+            in_sets[gv] = inherit_labels(
+                gv, glob_i[g_i_rev.out_neighbors(lv)], b_in, glob_i, in_sets
+            )
 
     return finalize_labels([sorted(s) for s in out_sets], [sorted(s) for s in in_sets])

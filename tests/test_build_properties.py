@@ -1,0 +1,75 @@
+"""Property-based tests of the wave construction engine (hypothesis).
+
+  * Completeness (Theorem 3) + byte-identity to the scalar reference on
+    arbitrary small random DAGs.
+  * Non-redundancy (Theorem 4): every hop the wave engine emits is
+    load-bearing.
+
+These complement the deterministic family tests in test_build_engine.py;
+both carry the ``slow`` marker (deselect with ``-m "not slow"``).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.build.engine import build_distribution_labels
+from repro.core.oracle import ReachabilityOracle
+from repro.graph.generators import random_dag
+from repro.graph.reach import reaches_bit, transitive_closure_bits
+
+
+@st.composite
+def small_dags(draw):
+    n = draw(st.integers(8, 40))
+    m = draw(st.integers(n // 2, 3 * n))
+    seed = draw(st.integers(0, 10_000))
+    return random_dag(n, m, seed=seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(small_dags())
+def test_wave_engine_complete_and_matches_reference(g):
+    """Theorem 3 (complete) + byte-identity on arbitrary small DAGs."""
+    ref = build_distribution_labels(g, impl="reference")
+    wav = build_distribution_labels(g, impl="wave")
+    assert ref.L_out.tobytes() == wav.L_out.tobytes()
+    assert ref.L_in.tobytes() == wav.L_in.tobytes()
+    assert np.array_equal(ref.out_len, wav.out_len)
+    assert np.array_equal(ref.in_len, wav.in_len)
+    tc = transitive_closure_bits(g)
+    for u in range(g.n):
+        for v in range(g.n):
+            if u != v:
+                assert wav.query(u, v) == reaches_bit(tc, u, v)
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000))
+def test_wave_engine_non_redundant(seed):
+    """Theorem 4: every hop the wave engine emits is load-bearing."""
+    g = random_dag(16, 32, seed=seed)
+    oracle = build_distribution_labels(g, impl="wave")
+    tc = transitive_closure_bits(g)
+
+    def complete_without(mat_name, vertex, drop) -> bool:
+        L_out, L_in = oracle.L_out.copy(), oracle.L_in.copy()
+        mat = L_out if mat_name == "out" else L_in
+        row = mat[vertex]
+        row[row == drop] = -1
+        o2 = ReachabilityOracle(L_out, L_in, oracle.out_len, oracle.in_len)
+        for u in range(g.n):
+            for v in range(g.n):
+                truth = True if u == v else reaches_bit(tc, u, v)
+                if truth != o2.query(u, v):
+                    return False
+        return True
+
+    for v in range(g.n):
+        for hop in oracle.L_out[v][oracle.L_out[v] != -1]:
+            assert not complete_without("out", v, int(hop))
+        for hop in oracle.L_in[v][oracle.L_in[v] != -1]:
+            assert not complete_without("in", v, int(hop))
