@@ -107,3 +107,96 @@ def time_queries(idx, queries: np.ndarray) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.3f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# trajectory regression gate (benchmarks/run.py --check-monotone)
+# ---------------------------------------------------------------------------
+
+MONOTONE_TRAJECTORY_FILES = ("BENCH_build.json", "BENCH_build_quick.json")
+
+
+def load_trajectory(paths=MONOTONE_TRAJECTORY_FILES) -> dict:
+    """Snapshot the committed per-dataset records BEFORE a run overwrites
+    them.  Returns dataset-key -> committed entry."""
+    import json
+    import os
+
+    committed = {}
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        with open(p) as f:
+            payload = json.load(f)
+        for key, entry in payload.get("datasets", {}).items():
+            committed.setdefault(key, entry)
+    return committed
+
+
+def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
+                   serve_path: str = "BENCH_serve.json",
+                   dynamic_path: str = "BENCH_dynamic.json", out=print) -> list:
+    """Diff a freshly written BENCH_build JSON against the committed
+    trajectory; returns the list of regressions (empty = monotone).
+
+    Checks, per dataset key present in both:
+      * byte-identity between engine and reference labels must still hold,
+      * index size (label ints) must not grow by more than ``tol``,
+      * the engine-vs-reference speedup RATIO must not drop by more than
+        ``tol`` — ratios are same-machine normalized, so the gate transfers
+        across hardware; absolute seconds are never compared.  Single-rep
+        (quick / smoke) rows skip the ratio check: one-shot timings are too
+        noisy to gate on.
+    The committed BENCH_serve.json and BENCH_dynamic.json ride along as
+    tripwires: recorded per-backend sample_errors must all be zero, the
+    dynamic record's rebuild-agreement check must show zero mismatches, and
+    its repair-vs-rebuild ratio must stay at or above the 5x acceptance bar.
+    """
+    import json
+    import os
+
+    regressions = []
+    with open(fresh_path) as f:
+        fresh = json.load(f).get("datasets", {})
+    compared = 0
+    for key, new in fresh.items():
+        old = trajectory.get(key)
+        if old is None:
+            continue
+        compared += 1
+        if not new.get("labels_match_reference", False):
+            regressions.append(f"{key}: engine labels no longer byte-identical")
+        ni, oi = new["engine"]["label_ints"], old["engine"]["label_ints"]
+        if ni > oi * (1 + tol):
+            regressions.append(
+                f"{key}: index size regressed {oi} -> {ni} ints (> {tol:.0%})")
+        if (new.get("reps", 1) >= 2 and old.get("reps", 1) >= 2
+                and new["engine"]["impl"] == "wave" == old["engine"]["impl"]):
+            ns, os_ = new["speedup"], old["speedup"]
+            if ns < os_ * (1 - tol):
+                regressions.append(
+                    f"{key}: engine speedup regressed {os_:.2f}x -> {ns:.2f}x "
+                    f"(> {tol:.0%} drop)")
+    if os.path.exists(serve_path):
+        with open(serve_path) as f:
+            serve = json.load(f)
+        for be, rec in serve.get("backends", {}).items():
+            if rec.get("sample_errors", 0):
+                regressions.append(
+                    f"serve[{be}]: {rec['sample_errors']} sample errors recorded")
+    if os.path.exists(dynamic_path):
+        with open(dynamic_path) as f:
+            dyn = json.load(f)
+        mism = dyn.get("correctness_vs_rebuild", {}).get("mismatches", 0)
+        if mism:
+            regressions.append(
+                f"dynamic: {mism} rebuild-agreement mismatches recorded")
+        ratio = dyn.get("repair_vs_rebuild_ratio")
+        if ratio is not None and ratio < 5.0:
+            regressions.append(
+                f"dynamic: repair/rebuild ratio {ratio} fell below the 5x bar")
+    out(f"# check-monotone: {compared} dataset(s) compared against the "
+        f"committed trajectory, {len(regressions)} regression(s)")
+    for r in regressions:
+        out(f"# REGRESSION: {r}")
+    return regressions

@@ -30,11 +30,21 @@ def main() -> None:
                     help="where the construction section writes its JSON record "
                          "(default: BENCH_build.json, or BENCH_build_quick.json "
                          "in --quick mode)")
+    ap.add_argument("--check-monotone", action="store_true",
+                    help="after the run, diff the fresh construction record "
+                         "against the committed BENCH trajectory and exit "
+                         "nonzero on a >10%% regression (index size growth, "
+                         "engine-speedup drop, lost byte-identity, or recorded "
+                         "serve sample errors)")
     args = ap.parse_args()
     if args.json_out is None:
         args.json_out = "BENCH_build_quick.json" if args.quick else "BENCH_build.json"
 
     from benchmarks import construction_time, index_size, kernel_bench, query_time
+    from benchmarks.common import check_monotone, load_trajectory
+
+    # snapshot the committed trajectory before any section overwrites it
+    trajectory = load_trajectory() if args.check_monotone else None
 
     sections = {
         "kernel_bench": kernel_bench.run,
@@ -48,12 +58,25 @@ def main() -> None:
         sections = {"construction_time": sections["construction_time"]}
     flushing = lambda s: print(s, flush=True)
     t0 = time.perf_counter()
+    ran = set()
     for name, fn in sections.items():
         if args.only and name != args.only:
             continue
         print(f"\n## section: {name}", flush=True)
         fn(out=flushing)
+        ran.add(name)
     print(f"\n## total_bench_seconds,{time.perf_counter() - t0:.1f},", flush=True)
+
+    if args.check_monotone:
+        if "construction_time" not in ran:
+            # without a fresh record the diff would compare the committed
+            # baseline against itself and pass vacuously
+            raise SystemExit(
+                "--check-monotone: the construction section did not run "
+                f"(sections ran: {sorted(ran)}); drop --only")
+        regressions = check_monotone(args.json_out, trajectory, out=flushing)
+        if regressions:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

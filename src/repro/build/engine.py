@@ -44,7 +44,10 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.build import bitset
-from repro.build.traverse import pruned_bfs_distribute
+# cone_resume_sweep is the engine's cone-scoped construction entry point
+# (repro.dynamic repairs labels through it); it lives in traverse.py beside
+# the sibling scalar sweep it generalizes
+from repro.build.traverse import cone_resume_sweep, pruned_bfs_distribute  # noqa: F401
 from repro.build.waves import wave_schedule
 from repro.core.oracle import ReachabilityOracle, finalize_labels
 from repro.core.order import get_order

@@ -22,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.cell import CellSpec, data_axes_of, shardings_of
 from repro.core.distribution_jax import LabelState, distribute_one
-from repro.core.query import serve_step
+from repro.serve.engine import serve_step
 
 ARCH_ID = "reachability-oracle"
 FAMILY = "oracle"

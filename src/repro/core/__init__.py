@@ -11,8 +11,7 @@ from repro.core.distribution_jax import distribution_labeling_jax
 from repro.core.hierarchy import hierarchical_labeling, decompose
 from repro.core.backbone import one_side_backbone, fast_cover
 from repro.core.order import get_order
-from repro.core.query import serve_step, intersect_rows
-from repro.serve.engine import QueryEngine, select_backend
+from repro.serve.engine import QueryEngine, intersect_rows, select_backend, serve_step
 
 __all__ = [
     "QueryEngine",

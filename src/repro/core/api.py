@@ -45,12 +45,16 @@ class CondensedOracle:
         return self.oracle.total_label_size
 
     def query(self, u: int, v: int) -> bool:
-        return self.engine.query(int(self.comp[u]), int(self.comp[v]))
+        return self.engine.query(int(u), int(v))
 
     def serve(self, queries: np.ndarray, backend: Optional[str] = None) -> np.ndarray:
-        """Batched engine path. queries: int[B, 2] original ids -> bool[B]."""
-        cq = self.comp[np.asarray(queries, dtype=np.int64)].astype(np.int32)
-        return self.engine.query_batch(cq, backend=backend)
+        """Batched engine path. queries: int[B, 2] original ids -> bool[B].
+
+        The original->condensation mapping happens inside the engine through
+        its ``comp_source`` hook (reading this oracle's current comp array),
+        so the same-SCC short-circuit can never act on a stale cached copy
+        when the condensation is maintained dynamically."""
+        return self.engine.query_batch(np.asarray(queries), backend=backend)
 
 
 def build_oracle(
@@ -76,4 +80,8 @@ def build_oracle(
         mesh=mesh,
         bucketing=bucketing,
     )
-    return CondensedOracle(oracle=oracle, comp=comp, engine=engine)
+    co = CondensedOracle(oracle=oracle, comp=comp, engine=engine)
+    # queries reach the engine in original ids; the engine reads the comp
+    # array through the oracle at call time (never a private cached copy)
+    engine.comp_source = lambda: co.comp
+    return co

@@ -28,6 +28,8 @@ from repro.graph.csr import INVALID
 
 # length of the high-rank prefix probed before the full merge in host queries
 _PREFIX = 8
+# row padding multiple shared with finalize_labels / the build engine
+_PAD_MULT = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +63,58 @@ class ReachabilityOracle:
             inv = np.argsort(self.hop_rank).astype(np.int32)
             object.__setattr__(self, "_inv_rank", inv)
         return inv[np.asarray(hops)]
+
+    # ---------------- row hooks (dynamic-oracle seam) ----------------
+
+    def row_out(self, v: int) -> np.ndarray:
+        """L_out(v) without padding (sorted ascending, rank space)."""
+        return self.L_out[v, : self.out_len[v]]
+
+    def row_in(self, v: int) -> np.ndarray:
+        """L_in(v) without padding (sorted ascending, rank space)."""
+        return self.L_in[v, : self.in_len[v]]
+
+    def with_updated_rows(
+        self,
+        out_rows: "dict[int, Sequence[int]]",
+        in_rows: "dict[int, Sequence[int]]",
+    ) -> "ReachabilityOracle":
+        """Copy-on-write row replacement: the append/invalidate hook used by
+        ``repro.dynamic`` to publish repaired labels as a new immutable
+        snapshot.  Each dict maps vertex -> full replacement row (sorted
+        ascending, rank space, no padding; may be longer or shorter than the
+        current row — matrices grow in the same multiple-of-8 padding as
+        ``finalize_labels``).  The result is byte-identical to re-finalizing
+        the mutated label lists.  A side with no updates shares the base
+        matrix outright (snapshots are immutable); a side with updates is
+        copied before writing, so publish cost tracks the dirtied side's
+        matrix, not both."""
+
+        def _cow(mat: np.ndarray, lens: np.ndarray, updates):
+            if not updates:
+                return mat, lens
+            lens = lens.copy()
+            need = int(max((len(r) for r in updates.values()), default=0))
+            width = mat.shape[1]
+            if need > width:
+                width = max(
+                    ((need + _PAD_MULT - 1) // _PAD_MULT) * _PAD_MULT, _PAD_MULT
+                )
+            grown = np.full((mat.shape[0], width), INVALID, dtype=np.int32)
+            grown[:, : mat.shape[1]] = mat
+            for v, row in updates.items():
+                ln = len(row)
+                grown[v, :ln] = np.asarray(row, dtype=np.int32)
+                grown[v, ln : max(int(lens[v]), ln)] = INVALID
+                lens[v] = ln
+            return grown, lens
+
+        L_out, out_len = _cow(self.L_out, self.out_len, out_rows)
+        L_in, in_len = _cow(self.L_in, self.in_len, in_rows)
+        return ReachabilityOracle(
+            L_out=L_out, L_in=L_in, out_len=out_len, in_len=in_len,
+            hop_rank=self.hop_rank,
+        )
 
     # ---------------- host query paths ----------------
 

@@ -1,10 +1,22 @@
-"""Compatibility shim — the batched/sharded serve path moved to
-``repro.serve.engine`` (the QueryEngine subsystem). Import from there; this
-module keeps the long-standing ``repro.core.query`` entry points alive.
+"""DEPRECATED compatibility shim — the batched/sharded serve path moved to
+``repro.serve.engine`` (the QueryEngine subsystem).  Import from
+``repro.serve`` instead; this module keeps the long-standing
+``repro.core.query`` entry points alive for one more release and warns on
+import so downstream callers migrate before it is removed.
 """
 from __future__ import annotations
 
-from repro.serve.engine import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.query is deprecated: the serve path lives in repro.serve "
+    "(QueryEngine / serve_step / make_sharded_serve_step); import from "
+    "repro.serve.engine instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.serve.engine import (  # noqa: F401,E402
     intersect_rows,
     make_hop_sharded_serve_step,
     make_sharded_serve_step,

@@ -1,0 +1,39 @@
+"""Dynamic oracle: incremental label maintenance under edge updates.
+
+    dyn = DynamicOracle(g)                  # cycles allowed, SCCs maintained
+    dyn.apply(UpdateBatch.of(inserts=[(u, v)], deletes=[(a, b)]))
+    e = dyn.publish()                       # new immutable epoch
+    dyn.serve(queries)                      # current epoch, full engine path
+    dyn.serve(queries, epoch=e - 1)         # pinned older snapshot
+
+Layers: ``delta`` (edge log + SCC-condensation maintenance), ``repair``
+(resumed pruned-BFS label repair), ``versioned`` (epoch snapshots, COW
+publish, staleness budget), ``workload`` (interleaved trace generation and
+replay).
+"""
+from repro.dynamic.delta import (
+    CondensationState,
+    DeltaEvent,
+    EdgeUpdate,
+    UpdateBatch,
+)
+from repro.dynamic.repair import MutableLabels, repair_delete, repair_insert
+from repro.dynamic.versioned import ApplyStats, DynamicOracle, LabelEpoch
+from repro.dynamic.workload import ReplayStats, TraceOp, generate_trace, replay
+
+__all__ = [
+    "ApplyStats",
+    "CondensationState",
+    "DeltaEvent",
+    "DynamicOracle",
+    "EdgeUpdate",
+    "LabelEpoch",
+    "MutableLabels",
+    "ReplayStats",
+    "TraceOp",
+    "UpdateBatch",
+    "generate_trace",
+    "repair_delete",
+    "repair_insert",
+    "replay",
+]

@@ -1,0 +1,280 @@
+"""Versioned serving over a mutating oracle: epochs, COW publish, budgets.
+
+The serving contract under churn:
+
+  * every published **epoch** is an immutable ``LabelEpoch`` snapshot —
+    labels, condensation comp array, and topological levels frozen together
+    so a query pinned to epoch e sees one consistent world,
+  * updates mutate a WORKING copy (``repair.MutableLabels`` + the live
+    ``delta.CondensationState``); nothing a query can observe changes until
+    ``publish()``,
+  * publish copy-on-writes only the dirty rows into the previous snapshot's
+    dense layout (``ReachabilityOracle.with_updated_rows``) and refreshes
+    the QueryEngine in place — device label arrays and the bucketed-batching
+    tier plan are re-derived exactly once per epoch, and when the tier
+    widths come out unchanged the jit traces survive untouched,
+  * a **staleness budget** decides repair-vs-rebuild: structural SCC events
+    (merge/split), oversized delete cones, or cumulative churn beyond a
+    fraction of the index all route the next publish through ``repro.build``
+    for a compacting full rebuild (fresh §5.2 order, fresh ranks, fresh
+    levels).
+
+Query routing: the current epoch serves through the QueryEngine (all
+backends, prefilters, bucketing); older pinned epochs serve through their
+snapshot's host path — they exist for consistency, not throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import List, Optional
+
+import numpy as np
+
+from repro.build.engine import build_distribution_labels
+from repro.core.oracle import ReachabilityOracle
+from repro.dynamic import delta as delta_mod
+from repro.dynamic.delta import CondensationState, UpdateBatch
+from repro.dynamic.repair import MutableLabels, repair_delete, repair_insert
+from repro.graph.csr import CSRGraph
+from repro.serve.engine import QueryEngine
+from repro.serve.prefilter import apply_prefilters, topo_levels
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelEpoch:
+    """One immutable published snapshot."""
+    epoch: int
+    oracle: ReachabilityOracle
+    comp: np.ndarray     # original vertex -> condensation id, frozen copy
+    level: np.ndarray    # topological levels of the condensation, frozen
+
+    def query_batch(self, queries: np.ndarray) -> np.ndarray:
+        """Host-path batch answers in ORIGINAL vertex ids (pinned epoch)."""
+        cq = self.comp[np.asarray(queries, dtype=np.int64)].astype(np.int32)
+        o = self.oracle
+        pf = apply_prefilters(cq, o.out_len, o.in_len, self.level)
+        out = pf.decided & pf.value
+        rest = np.nonzero(~pf.decided)[0]
+        for i in rest:
+            out[i] = o.query(int(cq[i, 0]), int(cq[i, 1]))
+        return out
+
+
+@dataclasses.dataclass
+class ApplyStats:
+    """What one ``apply`` batch did."""
+    n_updates: int = 0
+    noop: int = 0
+    repaired_inserts: int = 0
+    repaired_deletes: int = 0
+    structural: int = 0
+    deferred: int = 0          # events skipped because a rebuild is pending
+    label_appends: int = 0
+    label_drops: int = 0
+    rebuild_pending: bool = False
+
+
+class DynamicOracle:
+    """Reachability oracle over a LIVE digraph: edge updates between epochs.
+
+    Parameters
+    ----------
+    g : CSRGraph
+        Initial digraph (cycles allowed — SCCs are condensed and maintained
+        incrementally from then on).
+    backend, mesh, bucketing : forwarded to the QueryEngine.
+    staleness_budget : float
+        Fraction of the index (in label ints) the incremental repairs may
+        churn before the next publish compacts via a full rebuild.
+    max_cone_frac : float
+        A delete whose affected cone (|anc(u)| + |desc(v)|) exceeds this
+        fraction of live condensation vertices falls back to rebuild — past
+        that point the scoped re-distribution costs more than building.
+    keep_epochs : int
+        How many published snapshots stay pinnable.
+    """
+
+    def __init__(
+        self,
+        g: CSRGraph,
+        backend: str = "auto",
+        mesh=None,
+        bucketing: bool = True,
+        staleness_budget: float = 0.5,
+        max_cone_frac: float = 0.1,
+        keep_epochs: int = 4,
+        build_impl: str = "auto",
+    ):
+        self.delta = CondensationState(g)
+        self.staleness_budget = float(staleness_budget)
+        self.max_cone_frac = float(max_cone_frac)
+        self.keep_epochs = int(keep_epochs)
+        self.build_impl = build_impl
+        self._rebuild_pending = False
+        self._churn = 0
+        self.rebuild_count = 0
+        self.repair_count = 0
+        self._rebuild_labels()
+        self._epochs: "OrderedDict[int, LabelEpoch]" = OrderedDict()
+        self._epoch = 0
+        self.engine = QueryEngine(
+            self._snapshot_oracle(), backend=backend, mesh=mesh,
+            bucketing=bucketing, level=self.level,
+            comp_source=self._current_comp, epoch=0,
+        )
+        self._install_epoch(self._snapshot_oracle())
+
+    # ----------------------------------------------------------- internals
+
+    def _current_comp(self) -> np.ndarray:
+        """Comp array of the CURRENT epoch (what the engine serves)."""
+        return self._epochs[self._epoch].comp if self._epochs else self.delta.comp
+
+    def _rebuild_labels(self) -> None:
+        """Compacting rebuild: fresh order/ranks/levels from repro.build."""
+        dag = self.delta.dag_csr()
+        oracle = build_distribution_labels(dag, impl=self.build_impl)
+        self.hop_rank = oracle.hop_rank
+        self.inv_rank = np.argsort(self.hop_rank).astype(np.int32)
+        self.labels = MutableLabels.from_oracle(oracle)
+        self.level = topo_levels(dag)
+        self._base_oracle = oracle  # COW base for the next publish
+        self._rebuild_pending = False
+        self._churn = 0
+        self.rebuild_count += 1
+
+    def _snapshot_oracle(self) -> ReachabilityOracle:
+        """Finalize the working rows into an immutable oracle via COW."""
+        out_rows, in_rows = self.labels.take_dirty()
+        if out_rows or in_rows:
+            self._base_oracle = self._base_oracle.with_updated_rows(out_rows, in_rows)
+        return self._base_oracle
+
+    def _install_epoch(self, oracle: ReachabilityOracle) -> None:
+        ep = LabelEpoch(
+            epoch=self._epoch,
+            oracle=oracle,
+            comp=self.delta.comp.copy(),
+            level=np.asarray(self.level, dtype=np.int32).copy(),
+        )
+        self._epochs[self._epoch] = ep
+        while len(self._epochs) > self.keep_epochs:
+            self._epochs.popitem(last=False)
+
+    def _raise_levels(self, cu: int, cv: int) -> None:
+        """Scoped topological-level maintenance after DAG insert (cu, cv).
+
+        Levels must stay a valid topological numbering for the serve-path
+        level prefilter to remain sound; deletions only relax constraints
+        (the old numbering stays valid), insertions propagate forward."""
+        if self.level[cu] < self.level[cv]:
+            return
+        level = self.level
+        level[cv] = level[cu] + 1
+        stack = [cv]
+        while stack:
+            x = stack.pop()
+            lx = level[x] + 1
+            for w in self.delta.dag_out[x]:
+                if level[w] < lx:
+                    level[w] = lx
+                    stack.append(w)
+
+    # -------------------------------------------------------------- update
+
+    def apply(self, batch: UpdateBatch) -> ApplyStats:
+        """Apply an update batch to the WORKING state (visible at publish).
+
+        Each update flows: condensation maintenance (``delta``) -> label
+        repair for plain DAG events -> structural events or budget misses
+        mark the epoch for a compacting rebuild at the next publish.
+        """
+        stats = ApplyStats(n_updates=len(batch))
+        max_cone = max(64, int(self.max_cone_frac * max(self.delta.n_live, 1)))
+        for up in batch.updates:
+            ev = (self.delta.insert(up.u, up.v) if up.insert
+                  else self.delta.delete(up.u, up.v))
+            if ev.kind == delta_mod.NOOP:
+                stats.noop += 1
+                continue
+            if ev.structural:
+                stats.structural += 1
+                self._rebuild_pending = True
+                continue
+            if self._rebuild_pending:
+                stats.deferred += 1
+                continue  # labels are already stale; the rebuild covers it
+            if ev.kind == delta_mod.DAG_INSERT:
+                before = self.labels.appends
+                repair_insert(self.labels, self.delta, self.inv_rank,
+                              ev.cu, ev.cv)
+                self._raise_levels(ev.cu, ev.cv)
+                stats.repaired_inserts += 1
+                stats.label_appends += self.labels.appends - before
+                self.repair_count += 1
+            else:  # DAG_DELETE
+                before_a, before_d = self.labels.appends, self.labels.drops
+                ok = repair_delete(self.labels, self.delta, self.hop_rank,
+                                   self.inv_rank, ev.cu, ev.cv, max_cone)
+                if not ok:
+                    self._rebuild_pending = True
+                    continue
+                stats.repaired_deletes += 1
+                stats.label_appends += self.labels.appends - before_a
+                stats.label_drops += self.labels.drops - before_d
+                self.repair_count += 1
+        self._churn += stats.label_appends + stats.label_drops
+        total = max(self.labels.label_ints(), 1)
+        if self._churn > self.staleness_budget * total:
+            self._rebuild_pending = True
+        stats.rebuild_pending = self._rebuild_pending
+        return stats
+
+    def publish(self) -> int:
+        """Publish the working state as a new immutable epoch."""
+        if self._rebuild_pending:
+            self._rebuild_labels()
+        oracle = self._snapshot_oracle()
+        self._epoch += 1
+        self._install_epoch(oracle)
+        self.engine.refresh(oracle, level=self.level, epoch=self._epoch)
+        return self._epoch
+
+    # -------------------------------------------------------------- serve
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def epochs(self) -> List[int]:
+        return list(self._epochs.keys())
+
+    @property
+    def total_label_size(self) -> int:
+        return self._epochs[self._epoch].oracle.total_label_size
+
+    def snapshot(self, epoch: Optional[int] = None) -> LabelEpoch:
+        ep = self._epoch if epoch is None else int(epoch)
+        if ep not in self._epochs:
+            raise KeyError(
+                f"epoch {ep} not pinnable (kept: {list(self._epochs)})")
+        return self._epochs[ep]
+
+    def query(self, u: int, v: int, epoch: Optional[int] = None) -> bool:
+        """Single query in ORIGINAL vertex ids, optionally pinned."""
+        if epoch is None or epoch == self._epoch:
+            return self.engine.query(int(u), int(v))
+        ep = self.snapshot(epoch)
+        return bool(ep.query_batch(np.array([[u, v]], dtype=np.int64))[0])
+
+    def serve(self, queries: np.ndarray, backend: Optional[str] = None,
+              epoch: Optional[int] = None) -> np.ndarray:
+        """Batched queries in ORIGINAL vertex ids.
+
+        ``epoch=None`` (or the current epoch) runs the full QueryEngine
+        path; an older pinned epoch answers from its frozen snapshot."""
+        if epoch is None or epoch == self._epoch:
+            return self.engine.query_batch(np.asarray(queries), backend=backend)
+        return self.snapshot(epoch).query_batch(np.asarray(queries))

@@ -167,6 +167,16 @@ class QueryEngine:
         Required for the sharded backends.
     bucketing : bool
         Length-bucketed micro-batching for dense/kernel backends.
+    comp_source : optional callable -> int32[n_original]
+        When set, queries arrive in ORIGINAL vertex ids and are mapped to the
+        oracle's condensation id space through ``comp_source()`` at call time.
+        The indirection is deliberate: the owner (``CondensedOracle`` /
+        ``repro.dynamic.DynamicOracle``) controls which comp array is current,
+        so SCC-condensation merges can never serve a stale same-SCC verdict
+        from a comp array cached inside the engine.
+    epoch : int
+        Label-snapshot epoch this engine currently serves (see
+        ``repro.dynamic.versioned``); bumped by ``refresh``.
     """
 
     def __init__(
@@ -180,17 +190,24 @@ class QueryEngine:
         bucketing: bool = True,
         n_tiers: int = 3,
         min_tile: int = 256,
+        comp_source=None,
+        epoch: int = 0,
     ):
         self.oracle = oracle
         self.mesh = mesh
         self.backend = select_backend(backend, mesh)
-        self.level = None if level is None else np.asarray(level, dtype=np.int32)
+        # own copy: the owner may keep mutating its working level array
+        # between publishes (repro.dynamic), and queries must not see it
+        self.level = None if level is None else np.array(level, dtype=np.int32)
         self.bucketing = bucketing
         self.min_tile = int(min_tile)
+        self.n_tiers = int(n_tiers)
         if data_axes is None and mesh is not None:
             data_axes = tuple(ax for ax in mesh.axis_names if ax != model_axis)
         self.data_axes = data_axes
         self.model_axis = model_axis
+        self.comp_source = comp_source
+        self.epoch = int(epoch)
         self._lo, self._li = oracle.device_labels()
         self.widths = tier_widths(
             oracle.out_len, oracle.in_len, oracle.max_label_len, n_tiers=n_tiers
@@ -198,10 +215,41 @@ class QueryEngine:
         self._sharded_fns: dict = {}
         self.last_stats: dict = {}
 
+    # ---------------------------------------------------------- publishing
+
+    def refresh(self, oracle, level: Optional[np.ndarray] = None,
+                epoch: Optional[int] = None) -> None:
+        """Swap in a newly published label snapshot (epoch invalidation).
+
+        Device label arrays and the tier-width plan refresh ONLY here — never
+        mid-batch — so in-flight queries keep their pinned epoch's arrays.
+        Tier widths are recomputed from the new length distribution, but when
+        they come out unchanged (the common case for incremental repairs) the
+        bucketed jit traces stay keyed to the same (rows, width) shapes and
+        nothing retraces.
+        """
+        self.oracle = oracle
+        if level is not None:
+            self.level = np.array(level, dtype=np.int32)  # copy: see __init__
+        self._lo, self._li = oracle.device_labels()
+        self.widths = tier_widths(
+            oracle.out_len, oracle.in_len, oracle.max_label_len, n_tiers=self.n_tiers
+        )
+        self.epoch = self.epoch + 1 if epoch is None else int(epoch)
+
     # ------------------------------------------------------------- queries
+
+    def _map_ids(self, queries: np.ndarray) -> np.ndarray:
+        comp = self.comp_source() if self.comp_source is not None else None
+        if comp is None:
+            return queries
+        return comp[np.asarray(queries, dtype=np.int64)].astype(np.int32)
 
     def query(self, u: int, v: int) -> bool:
         """Single host query (prefilters + rank-ordered sorted merge)."""
+        if self.comp_source is not None:
+            comp = self.comp_source()
+            u, v = int(comp[u]), int(comp[v])
         if u == v:
             return True
         o = self.oracle
@@ -212,7 +260,13 @@ class QueryEngine:
         return o.query(u, v)
 
     def query_batch(self, queries: np.ndarray, backend: Optional[str] = None) -> np.ndarray:
-        """Answer int[B, 2] queries -> bool[B]."""
+        """Answer int[B, 2] queries -> bool[B].
+
+        With ``comp_source`` set, queries are original vertex ids and the
+        same-SCC short-circuit (the engine's ``u == v`` prefilter after
+        mapping) reads the CURRENT condensation — not a cached copy.
+        """
+        queries = self._map_ids(np.asarray(queries))
         queries = np.ascontiguousarray(np.asarray(queries, dtype=np.int32))
         backend = self.backend if backend is None else select_backend(backend, self.mesh)
         o = self.oracle

@@ -7,7 +7,13 @@ only runs on the residue. Four filters, all vectorized and backend-agnostic
 array API so the same function traces on device):
 
   * u == v                      -> True  (reflexive; same condensation vertex
-                                          also covers same-SCC original pairs)
+                                          also covers same-SCC original pairs.
+                                          The engine maps original ids through
+                                          its owner's comp_source at CALL time
+                                          — never a comp array cached at
+                                          engine construction — so dynamic
+                                          SCC merges can't serve stale
+                                          same-SCC verdicts)
   * out_len[u] == 0             -> False (u reaches nothing but itself)
   * in_len[v] == 0              -> False (nothing but v reaches v)
   * level[u] >= level[v]        -> False (topological-level filter: every

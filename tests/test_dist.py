@@ -32,7 +32,7 @@ import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.distribution import distribution_labeling
-from repro.core.query import make_sharded_serve_step, make_hop_sharded_serve_step
+from repro.serve.engine import make_sharded_serve_step, make_hop_sharded_serve_step
 from repro.graph.generators import random_dag
 from repro.graph.reach import transitive_closure_bits, sample_query_workload
 mesh = jax.make_mesh((4, 2), ('data', 'model'))

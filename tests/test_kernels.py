@@ -125,7 +125,7 @@ def test_embedding_bag_sweep(V, D, B, bag, rng):
 def test_serve_step_kernel_path_matches():
     """the oracle serve engine with use_kernel=True equals the jnp path."""
     from repro.core.distribution import distribution_labeling
-    from repro.core.query import serve_step
+    from repro.serve.engine import serve_step
     from repro.graph.generators import random_dag
 
     g = random_dag(120, 320, seed=1)
