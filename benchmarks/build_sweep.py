@@ -20,11 +20,17 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: one small dataset, one rep "
                          "(writes BENCH_build_quick.json)")
+    ap.add_argument("--ci", action="store_true",
+                    help="medium-cost CI tier: one mid-size dataset at "
+                         "best-of-4 (writes BENCH_build_ci.json)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
     if args.json_out is None:
-        args.json_out = "BENCH_build_quick.json" if args.quick else "BENCH_build.json"
-    construction_time._engine_vs_reference_json(args.json_out, quick=args.quick)
+        args.json_out = ("BENCH_build_ci.json" if args.ci
+                         else "BENCH_build_quick.json" if args.quick
+                         else "BENCH_build.json")
+    construction_time._engine_vs_reference_json(args.json_out, quick=args.quick,
+                                                ci=args.ci)
 
 
 if __name__ == "__main__":

@@ -39,6 +39,21 @@ BUILD_COMPARE = [
     ("citeseerx", 0.005, 1),
 ]
 BUILD_COMPARE_QUICK = [("citeseer", 0.02, 1)]
+# the medium-cost CI tier: one mid-size dataset at best-of-4, so the
+# --check-monotone speedup-RATIO gate (which skips single-rep rows as too
+# noisy) fires on every PR, not just on full sweeps.  The scale is
+# deliberately distinct from the full grid's 0.03 row: the CI key's
+# baseline lives in the committed BENCH_build_ci.json, measured at the SAME
+# tier (same reps) it is gated at.
+BUILD_COMPARE_CI = [("uniprotenc_22m", 0.035, 4)]
+
+# the sparse device engine column: XLA on CPU hosts runs the same dataflow
+# the TPU path compiles, but emulating the per-wave device sweep costs
+# ~50-100ms per wave there — so the tracked device rows run at reduced
+# scales (byte-identity is still checked on every row; absolute seconds are
+# a CPU-emulation floor, not the accelerator story)
+DEVICE_COMPARE = [("amaze", 1.0), ("citeseer", 0.005), ("uniprotenc_22m", 0.005)]
+DEVICE_COMPARE_QUICK = [("citeseer", 0.002)]
 
 
 def _best_of(fn, reps: int):
@@ -49,14 +64,34 @@ def _best_of(fn, reps: int):
     return best_dt, out
 
 
-def _engine_vs_reference(out=print, quick: bool = False) -> dict:
+def _scheduler_breakdown(g, reps: int) -> dict:
+    """Scheduler-cost breakdown: one-pass windowed vs per-block closure on
+    the same order — the ROADMAP's "scheduler is 20-40% of wave builds"
+    claim, tracked instead of anecdotal."""
+    import numpy as np
+
+    from repro.build.waves import wave_schedule, wave_schedule_blocked
+    from repro.core.order import get_order
+
+    order = np.asarray(get_order(g, "degree_product"), dtype=np.int64)
+    t_one, waves_one = _best_of(lambda: wave_schedule(g, order), reps)
+    t_blk, waves_blk = _best_of(lambda: wave_schedule_blocked(g, order), reps)
+    return {
+        "onepass_seconds": round(t_one, 4),
+        "blocked_seconds": round(t_blk, 4),
+        "n_waves_onepass": int(waves_one.shape[0]),
+        "n_waves_blocked": int(waves_blk.shape[0]),
+    }
+
+
+def _engine_vs_reference(out=print, compare=None) -> dict:
     """The tracked record: auto-engine vs scalar reference, same graph."""
     from repro.core.distribution import distribution_labeling
 
     datasets = {}
     out("# build_engine_vs_reference (-> BENCH_build.json)")
     out("name,us_per_call,derived")
-    for ds, scale, reps in (BUILD_COMPARE_QUICK if quick else BUILD_COMPARE):
+    for ds, scale, reps in (BUILD_COMPARE if compare is None else compare):
         g = load_dataset(ds, scale=scale)
         t_ref, o_ref = _best_of(lambda: distribution_labeling(g, impl="reference"), reps)
         t_eng, o_eng = _best_of(lambda: distribution_labeling(g, impl="auto"), reps)
@@ -67,7 +102,8 @@ def _engine_vs_reference(out=print, quick: bool = False) -> dict:
         )
         speedup = t_ref / t_eng if t_eng > 0 else float("inf")
         key = f"{ds}@{scale}"
-        datasets[key] = {
+        stats = getattr(o_eng, "build_stats", {})
+        entry = {
             "n": g.n,
             "m": g.m,
             "reps": reps,
@@ -81,10 +117,21 @@ def _engine_vs_reference(out=print, quick: bool = False) -> dict:
                 "seconds": round(t_eng, 4),
                 "label_ints": o_eng.total_label_size,
                 "labels_per_sec": round(o_eng.total_label_size / t_eng),
+                "schedule_seconds": stats.get("schedule_seconds"),
+                "sweep_seconds": stats.get("sweep_seconds"),
             },
             "speedup": round(speedup, 3),
             "labels_match_reference": bool(match),
         }
+        if entry["engine"]["impl"] in ("wave", "device"):
+            sched = _scheduler_breakdown(g, reps)
+            sweep = stats.get("sweep_seconds") or 0.0
+            sched["share_onepass"] = round(
+                sched["onepass_seconds"] / max(sched["onepass_seconds"] + sweep, 1e-9), 4)
+            sched["share_blocked"] = round(
+                sched["blocked_seconds"] / max(sched["blocked_seconds"] + sweep, 1e-9), 4)
+            entry["scheduler"] = sched
+        datasets[key] = entry
         out(csv_row(
             f"build/{key}/engine-vs-ref", t_eng * 1e6,
             f"ref_s={t_ref:.3f};eng_s={t_eng:.3f};speedup={speedup:.2f}x;"
@@ -93,10 +140,58 @@ def _engine_vs_reference(out=print, quick: bool = False) -> dict:
     return datasets
 
 
+def _device_engine_tier(out=print, quick: bool = False) -> dict:
+    """The sparse device engine column: byte-identity + build time at the
+    reduced DEVICE_COMPARE scales (see the constant's comment)."""
+    from repro.core.distribution import distribution_labeling
+
+    rows = {}
+    out("# build_device_engine (sparse device wave engine, XLA expand)")
+    out("name,us_per_call,derived")
+    for ds, scale in (DEVICE_COMPARE_QUICK if quick else DEVICE_COMPARE):
+        g = load_dataset(ds, scale=scale)
+        t_ref, o_ref = time_once(lambda: distribution_labeling(g, impl="reference"))
+        t_dev, o_dev = time_once(
+            lambda: distribution_labeling(g, impl="device", expand="xla")
+        )
+        match = (
+            o_ref.L_out.tobytes() == o_dev.L_out.tobytes()
+            and o_ref.L_in.tobytes() == o_dev.L_in.tobytes()
+        )
+        key = f"{ds}@{scale}"
+        rows[key] = {
+            "n": g.n,
+            "m": g.m,
+            "seconds": round(t_dev, 4),
+            "reference_seconds": round(t_ref, 4),
+            "label_ints": o_dev.total_label_size,
+            "labels_match_reference": bool(match),
+            "n_waves": getattr(o_dev, "build_stats", {}).get("n_waves"),
+        }
+        out(csv_row(
+            f"build/{key}/device", t_dev * 1e6,
+            f"ref_s={t_ref:.3f};dev_s={t_dev:.3f};identical={match}",
+        ))
+    return rows
+
+
+def _compare_grid(quick: bool, ci: bool):
+    if ci:
+        return BUILD_COMPARE_CI
+    return BUILD_COMPARE_QUICK if quick else BUILD_COMPARE
+
+
 def run(small_methods=None, large_methods=None, *, out=print,
-        quick: bool = False, json_out: str | None = None):
+        quick: bool = False, ci: bool = False, json_out: str | None = None):
     t0 = time.time()
-    datasets = _engine_vs_reference(out=out, quick=quick)
+    datasets = _engine_vs_reference(out=out, compare=_compare_grid(quick, ci))
+    device_rows = _device_engine_tier(out=out, quick=quick or ci)
+    if ci:
+        # the CI tier is the engine-vs-reference ratio + device identity
+        # only; the paper tables stay on the quick/full paths
+        if json_out:
+            _write_json(datasets, device_rows, "ci", time.time() - t0, json_out, out=out)
+        return
 
     out("# table4_construction_small (paper Table 4)")
     out("name,us_per_call,derived")
@@ -139,22 +234,29 @@ def run(small_methods=None, large_methods=None, *, out=print,
                     out(csv_row(f"build/{ds}@{scale}/{name}", float("nan"), "OOM"))
 
     if json_out:
-        _write_json(datasets, quick, time.time() - t0, json_out, out=out)
+        _write_json(datasets, device_rows, "quick" if quick else "full",
+                    time.time() - t0, json_out, out=out)
 
 
-def _write_json(datasets: dict, quick: bool, elapsed: float, json_out: str, out=print):
+def _write_json(datasets: dict, device_rows: dict, tier: str, elapsed: float,
+                json_out: str, out=print):
     import jax
 
     speedups = {k: v["speedup"] for k, v in datasets.items()
-                if v["engine"]["impl"] == "wave"}
+                if v["engine"]["impl"] in ("wave", "device")}
     payload = {
-        "quick": quick,
+        "tier": tier,  # full | quick | ci — the records are self-describing
         "jax_platform": jax.default_backend(),
         "numpy": __import__("numpy").__version__,
-        "note": ("engine impl='auto' picks the wave/bitset builder where "
-                 "it pays and the scalar reference otherwise; "
-                 "labels are byte-identical either way"),
+        "note": ("engine impl='auto' picks the wave/bitset builder (or the "
+                 "sparse device engine on accelerators) where it pays and "
+                 "the scalar reference otherwise; labels are byte-identical "
+                 "either way.  'scheduler' breaks the build into schedule "
+                 "vs sweep (one-pass windowed vs per-block closure); "
+                 "'device_engine' tracks the sparse device path at reduced "
+                 "scales (interpret/XLA on CPU hosts)."),
         "datasets": datasets,
+        "device_engine": device_rows,
         "speedup_summary": {
             "wave_datasets_ge_3x": sorted(k for k, s in speedups.items() if s >= 3.0),
             "max_wave_speedup": max(speedups.values(), default=None),
@@ -167,11 +269,14 @@ def _write_json(datasets: dict, quick: bool, elapsed: float, json_out: str, out=
     out(f"# wrote {json_out}")
 
 
-def _engine_vs_reference_json(json_out: str, quick: bool = False, out=print):
+def _engine_vs_reference_json(json_out: str, quick: bool = False,
+                              ci: bool = False, out=print):
     """JSON-only entry point (benchmarks/build_sweep.py)."""
     t0 = time.time()
-    datasets = _engine_vs_reference(out=out, quick=quick)
-    _write_json(datasets, quick, time.time() - t0, json_out, out=out)
+    datasets = _engine_vs_reference(out=out, compare=_compare_grid(quick, ci))
+    device_rows = _device_engine_tier(out=out, quick=quick or ci)
+    tier = "ci" if ci else "quick" if quick else "full"
+    _write_json(datasets, device_rows, tier, time.time() - t0, json_out, out=out)
 
 
 if __name__ == "__main__":

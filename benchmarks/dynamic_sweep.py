@@ -149,10 +149,27 @@ def run_sweep(dataset: str = "citeseer", scale: float = 0.02, rounds: int = 10,
             "mqps_at_p50": round(queries_per_round / max(p50, 1e-9) / 1e6, 3),
         },
         "crossover": crossover,
+        "label_growth": _growth_summary(dyn),
         "correctness_vs_rebuild": {
             "checked_after_every_batch": bool(check),
             "mismatches": errors[0],
         },
+    }
+
+
+def _growth_summary(dyn) -> dict:
+    """Label-ints growth per epoch (rank-drift observability): repairs
+    distribute hops at stale build-time ranks, so a persistently positive
+    growth rate flags drift before the staleness budget compacts."""
+    gl = dyn.growth_log
+    rates = [e["growth_rate"] for e in gl if not e["rebuilt"]]
+    return {
+        "epochs_published": len(gl),
+        "rebuild_publishes": sum(1 for e in gl if e["rebuilt"]),
+        "final_label_ints": gl[-1]["label_ints"] if gl else dyn.total_label_size,
+        "mean_growth_rate_per_epoch": round(float(np.mean(rates)), 6) if rates else 0.0,
+        "max_growth_rate_per_epoch": round(float(np.max(rates)), 6) if rates else 0.0,
+        "per_epoch_tail": gl[-10:],
     }
 
 

@@ -26,10 +26,16 @@ def main() -> None:
     )
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: construction section only, tiny dataset")
+    ap.add_argument("--ci", action="store_true",
+                    help="medium-cost CI tier: construction section only on "
+                         "one mid-size dataset at best-of-4, so "
+                         "--check-monotone gates the engine speedup RATIO "
+                         "(single-rep quick rows are too noisy for the "
+                         "ratio gate)")
     ap.add_argument("--json-out", default=None,
                     help="where the construction section writes its JSON record "
-                         "(default: BENCH_build.json, or BENCH_build_quick.json "
-                         "in --quick mode)")
+                         "(default: BENCH_build.json, BENCH_build_quick.json "
+                         "in --quick mode, BENCH_build_ci.json in --ci mode)")
     ap.add_argument("--check-monotone", action="store_true",
                     help="after the run, diff the fresh construction record "
                          "against the committed BENCH trajectory and exit "
@@ -38,7 +44,9 @@ def main() -> None:
                          "serve sample errors)")
     args = ap.parse_args()
     if args.json_out is None:
-        args.json_out = "BENCH_build_quick.json" if args.quick else "BENCH_build.json"
+        args.json_out = ("BENCH_build_ci.json" if args.ci
+                         else "BENCH_build_quick.json" if args.quick
+                         else "BENCH_build.json")
 
     from benchmarks import construction_time, index_size, kernel_bench, query_time
     from benchmarks.common import check_monotone, load_trajectory
@@ -50,11 +58,11 @@ def main() -> None:
         "kernel_bench": kernel_bench.run,
         "index_size": index_size.run,
         "construction_time": lambda *, out: construction_time.run(
-            out=out, quick=args.quick, json_out=args.json_out
+            out=out, quick=args.quick, ci=args.ci, json_out=args.json_out
         ),
         "query_time": query_time.run,
     }
-    if args.quick and not args.only:
+    if (args.quick or args.ci) and not args.only:
         sections = {"construction_time": sections["construction_time"]}
     flushing = lambda s: print(s, flush=True)
     t0 = time.perf_counter()

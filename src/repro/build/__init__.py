@@ -4,17 +4,20 @@ The serve side got its subsystem in PR 1 (``repro.serve``); this package is
 the construction counterpart.  It owns every way an index gets *built*:
 
   * ``engine``      — Distribution-Labeling construction engine with pluggable
-                      implementations: the seed scalar path (``impl="reference"``)
-                      and the wave-scheduled bit-parallel path (``impl="wave"``).
-  * ``waves``       — the wave scheduler: groups consecutive vertices of the
-                      §5.2 rank order whose pruned-BFS sweeps provably commute
-                      (mutual unreachability, certified by DFS interval labels).
-  * ``bitset``      — packed uint64/uint32 bitset utilities shared by the host
-                      engine, the device engine, and tests.
+                      implementations: the seed scalar path (``impl="reference"``),
+                      the wave-scheduled bit-parallel path (``impl="wave"``), and
+                      the sparse device wave engine (``impl="device"``).
+  * ``waves``       — the wave schedulers: the one-pass rank-windowed scheduler
+                      (default) and the per-block closure scheduler, both grouping
+                      consecutive vertices of the §5.2 rank order whose pruned-BFS
+                      sweeps provably commute (mutual unreachability).
+  * ``bitset``      — packed uint64/uint32 bitset utilities + the degree-sorted
+                      ELL slab builder shared by host engine, device engine, tests.
   * ``traverse``    — the scalar pruned-BFS / label-merge helpers shared by the
                       reference engine and Hierarchical-Labeling.
-  * ``engine_jax``  — the device formulation of the wave sweep (frontier
-                      expansion through the Pallas ``bitset_mm`` OR-AND kernel).
+  * ``engine_jax``  — the sparse device wave engine (packed-frontier ELL
+                      expansion kernel, on-device segment-scatter label append,
+                      optional shard_map vertex sharding).
 
 ``repro.core.distribution`` and ``repro.core.hierarchy`` are thin wrappers
 over this package.

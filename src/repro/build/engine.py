@@ -31,14 +31,25 @@ byte-identical:
     sequential loop would produce, and label *sets* match exactly; rows are
     sorted once at the end, giving byte-identical finalized labels.
 
-``impl="auto"`` (default) picks "reference" for small graphs — the batched
-sweeps only pay off once there are enough vertices to amortize them — and
-"wave" everywhere else.
+``impl="device"``
+    The sparse device wave engine (``engine_jax.py``): the same wave
+    schedule, with the intra-wave sweep running on the accelerator through
+    the packed-frontier ELL expansion kernel and an on-device segment-
+    scatter label append.  Byte-identical to both host paths.
 
-The device twin of the wave sweep lives in ``engine_jax.py``.
+``impl="auto"`` (default) picks "reference" for small graphs — the batched
+sweeps only pay off once there are enough vertices to amortize them — then
+"device" when an accelerator is attached (jax backend != cpu) and "wave"
+otherwise.
+
+Every oracle built here carries a ``build_stats`` breadcrumb:
+``{"impl", "scheduler", "schedule_seconds", "sweep_seconds", "n_waves"}`` —
+the scheduler-cost breakdown BENCH_build.json tracks (the ROADMAP's
+"scheduler is 20-40% of wave builds" claim, measured per build).
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -62,18 +73,40 @@ _AUTO_WAVE_MIN = 4096
 _AUTO_MIN_AVG_WAVE = 24.0
 
 
+def _device_backend_available() -> bool:
+    """True when jax sees an accelerator (the device engine's auto gate)."""
+    try:
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:  # jax missing/broken: host paths still work
+        return False
+
+
 def build_distribution_labels(
     g: CSRGraph,
     order: Optional[np.ndarray] = None,
     order_name: str = "degree_product",
     impl: str = "auto",
     max_wave: int = 256,
+    scheduler: str = "onepass",
+    **device_kwargs,
 ) -> ReachabilityOracle:
-    """Build the DL oracle for DAG ``g`` with the selected implementation."""
+    """Build the DL oracle for DAG ``g`` with the selected implementation.
+
+    ``device_kwargs`` (``expand=``, ``l_max=``, ``ell_width=``, ``mesh=``,
+    ...) forward to the device engine and are rejected for the host impls —
+    a typo'd tuning knob must not silently no-op.
+    """
+    if device_kwargs and impl not in ("device", "auto"):
+        raise TypeError(
+            f"impl={impl!r} accepts no extra kwargs (got {sorted(device_kwargs)}); "
+            "they apply to the device engine only")
     if order is None:
         order = get_order(g, order_name)
     order = np.asarray(order, dtype=np.int64)
     waves = None
+    t_sched = 0.0
     if impl == "auto":
         if g.n < _AUTO_WAVE_MIN:
             impl = "reference"
@@ -81,23 +114,54 @@ def build_distribution_labels(
             # the schedule itself is the profitability probe: dense
             # high-reachability graphs (true conflicts everywhere) yield
             # tiny waves that cannot amortize the batched sweeps
+            t0 = time.perf_counter()
             waves = wave_schedule(
-                g, order, max_wave=max_wave, abort_below_avg=_AUTO_MIN_AVG_WAVE / 3
+                g, order, max_wave=max_wave, scheduler=scheduler,
+                abort_below_avg=_AUTO_MIN_AVG_WAVE / 3,
             )
+            t_sched = time.perf_counter() - t0
             if waves is None or g.n / waves.shape[0] < _AUTO_MIN_AVG_WAVE:
                 impl, waves = "reference", None
             else:
-                impl = "wave"
+                impl = "device" if _device_backend_available() else "wave"
+    if device_kwargs and impl not in ("device",):
+        # auto resolved to a host impl: device tuning knobs will not apply
+        # on THIS host — say so instead of silently no-opping
+        import warnings
+
+        warnings.warn(
+            f"device kwargs {sorted(device_kwargs)} ignored: impl resolved "
+            f"to {impl!r} on this host", stacklevel=2)
+    if impl in ("wave", "bitset", "device") and waves is None:
+        t0 = time.perf_counter()
+        waves = wave_schedule(g, order, max_wave=max_wave, scheduler=scheduler)
+        t_sched = time.perf_counter() - t0
+    t0 = time.perf_counter()
     if impl in ("reference", "ref"):
         oracle = _build_reference(g, order)
         impl = "reference"
     elif impl in ("wave", "bitset"):
         oracle = _build_wave(g, order, max_wave=max_wave, waves=waves)
         impl = "wave"
+    elif impl == "device":
+        from repro.build.engine_jax import distribution_labeling_device
+
+        oracle = distribution_labeling_device(
+            g, order=order, waves=waves, **device_kwargs
+        )
     else:
         raise ValueError(f"unknown construction impl {impl!r}")
-    # breadcrumb for benchmarks/telemetry: which engine actually built this
+    t_sweep = time.perf_counter() - t0
+    # breadcrumbs for benchmarks/telemetry: which engine actually built this
+    # and where the time went (scheduler share is a tracked BENCH metric)
     object.__setattr__(oracle, "build_impl", impl)
+    object.__setattr__(oracle, "build_stats", {
+        "impl": impl,
+        "scheduler": scheduler if waves is not None else None,
+        "schedule_seconds": round(t_sched, 4),
+        "sweep_seconds": round(t_sweep, 4),
+        "n_waves": None if waves is None else int(waves.shape[0]),
+    })
     return oracle
 
 

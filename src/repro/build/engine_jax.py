@@ -1,156 +1,295 @@
-"""Device formulation of the wave-batched construction sweep.
+"""Sparse device formulation of the wave-batched construction sweep.
 
 The host engine (``engine.py``) and this module share one dataflow per wave
 and per direction:
 
   1. prune:   pruned[u] = OR_{h in L(u)} hop_mask[h]      (gather + OR-reduce)
   2. reach:   masked multi-source BFS from the wave members where pruned
-              member-bits do not expand                    (OR-AND semiring)
-  3. append:  labeled = visited & ~pruned -> rank appends  (output-sized)
+              member-bits do not expand                    (ELL OR-gather)
+  3. append:  labeled = visited & ~pruned -> rank appends  (segment scatter)
 
-On device, step 2 is exactly the Pallas ``kernels/bitset_mm.py`` OR-AND
-kernel: one BFS level for all <= 64 member BFS sweeps is
-``bitset_mm(adjacency_bits, frontier_words)`` over packed uint32 words.
-Step 1 is a dense gather over the label matrix — the same membership-LUT
-dataflow as ``core/distribution_jax.py``'s per-vertex sweep, batched over
-the wave.  Because prune verdicts within a wave are static (no member's
-append can flip another member's test — see ``waves.py``), the whole wave
-reaches fixpoint on device with zero host round-trips per level.
+Everything inside a wave runs ON DEVICE:
 
-This builder materializes packed adjacency bits (n x n/32), so it is the
-*small-graph demonstrator* of the device dataflow; the production-scale
-sharded build remains ``distribution_jax.build_sweep`` (vertex-sharded,
-edge-list expansion).  Both produce labels byte-identical to the host
-engine's — asserted in tests.
+  * frontier expansion is the packed-frontier ELL kernel
+    (``kernels/frontier_ell.py``) over the degree-sorted neighbor slabs of
+    ``bitset.ell_slabs`` — operand footprint O(m + n*width), never the dense
+    ``n x n/32`` adjacency bits the old demonstrator materialized
+    (``expand="xla"`` swaps the Pallas call for an equivalent jnp gather —
+    the fast path on CPU hosts, same dataflow),
+  * the BFS fixpoint is a ``lax.while_loop`` — zero host round-trips per
+    level (prune verdicts within a wave are static, see ``waves.py``),
+  * the label append is a device segment scatter: member bits unpack to
+    per-vertex column positions (``lens + prefix-popcount``) and one
+    ``.at[rows, cols].set(ranks, mode="drop")`` lands every (vertex, rank)
+    append of the wave into the dense label matrix.  Per-level results
+    never round-trip to host; only a one-word overflow flag is read back
+    per direction, and the label matrices come down ONCE at finalize.
+  * with ``mesh=`` given, each slab's expansion runs under ``shard_map``
+    with destination rows sharded over the mesh's data axes and the (tiny,
+    packed) frontier words replicated — the vertex-sharded layout of
+    ``core/distribution_jax.py``; waves stay sequential, the sweep inside a
+    wave is embarrassingly data-parallel.
+
+Labels are byte-identical to the host engine's — asserted in tests across
+the serve-test graph families.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import numpy as np
 
 from repro.build import bitset
-from repro.build.engine import _hop_rank, _LabelStore
+from repro.build.engine import _hop_rank, sort_label_rows
 from repro.build.waves import wave_schedule
 from repro.core.oracle import ReachabilityOracle, finalize_labels
 from repro.core.order import get_order
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import CSRGraph, INVALID
 
 
-def _padded_rows(store: _LabelStore, pad: int) -> np.ndarray:
-    """Materialize the store's ragged label rows as a dense pad-filled matrix
-    (the device gather operand); columns >= len become ``pad``."""
-    lens = store.lens
-    used = max(int(lens.max()), 1)
-    out = np.full((store.n, used), pad, dtype=np.int32)
-    head = min(used, store.mat.shape[1])
-    cols = np.arange(head, dtype=np.int32)
-    out[:, :head] = np.where(cols[None, :] < lens[:, None], store.mat[:, :head], pad)
-    for v in store.deep:
-        row = store.row(v)
-        out[v, : row.shape[0]] = row
-    return out
-
-
-def _wave_sweep_device(
-    members: np.ndarray,
-    ranks: np.ndarray,
-    src: _LabelStore,       # label rows feeding the prune test
-    tgt: _LabelStore,       # labels being distributed into
-    adj_bits,               # jnp uint32[n, ceil(n/32)] expansion operand
-    n: int,
-    interpret: bool,
-) -> None:
-    """One direction of Algorithm 2 for a whole wave, frontier expansion on
-    device through the OR-AND kernel."""
+def _expand_fn(slabs, pos_of, n, wm, expand_impl, interpret, block_n, mesh):
+    """Build the per-level expansion closure: frontier words [n, wm] ->
+    OR-gathered words [n, wm] (one BFS step for every member at once)."""
     import jax.numpy as jnp
 
-    from repro.kernels.ops import bitset_mm
+    def _slab_xla(slab, f_pad):
+        idx = jnp.where(slab == INVALID, n, slab)
+        return jnp.bitwise_or.reduce(f_pad[idx], axis=1)
 
-    w = members.shape[0]
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        axes = tuple(ax for ax in mesh.axis_names if ax != "model")
+        shards = 1
+        for ax in axes:
+            shards *= mesh.shape[ax]
+
+        def _sharded(slab, f_pad):
+            pad = (-slab.shape[0]) % shards
+            if pad:
+                slab = jnp.pad(slab, ((0, pad), (0, 0)), constant_values=INVALID)
+            out = shard_map(
+                _slab_xla, mesh=mesh,
+                in_specs=(P(axes, None), P(None, None)),
+                out_specs=P(axes, None),
+            )(slab, f_pad)
+            return out[: out.shape[0] - pad] if pad else out
+
+        slab_fn = _sharded
+    elif expand_impl == "pallas":
+        from repro.kernels.ops import frontier_or
+
+        def slab_fn(slab, f_pad):
+            return frontier_or(slab, f_pad[:-1], block_n=block_n, interpret=interpret)
+    else:
+        slab_fn = _slab_xla
+
+    slab_arrs = [jnp.asarray(s) for s in slabs]
+    pos = jnp.asarray(pos_of)
+
+    def expand(f):  # uint32[n, wm] -> uint32[n, wm]
+        f_pad = jnp.concatenate([f, jnp.zeros((1, wm), dtype=jnp.uint32)])
+        out_perm = jnp.zeros((n, wm), dtype=jnp.uint32)
+        for slab in slab_arrs:
+            r = slab.shape[0]
+            part = slab_fn(slab, f_pad)
+            out_perm = out_perm.at[:r, :].set(out_perm[:r] | part)
+        return out_perm[pos]
+
+    return expand
+
+
+def _make_wave_step(n, w, l_max, expand):
+    """One direction of Algorithm 2 for a whole wave, fully on device."""
+    import jax
+    import jax.numpy as jnp
+
     wm = (w + 31) // 32
-    pad = n
-
-    # hop_mask[h] = uint32 member words of members whose prune row contains h
-    hop_mask = np.zeros((n + 1, wm), dtype=np.uint32)
-    word = np.arange(w) // 32
+    word = np.arange(w, dtype=np.int32) // 32
     bit = np.uint32(1) << (np.arange(w, dtype=np.uint32) % np.uint32(32))
-    for j in range(w):  # W <= 64 rows, host-side setup
-        hops = src.row(int(members[j]))
-        hop_mask[hops, word[j]] |= bit[j]
 
-    # 1. static prune verdicts: gather every vertex's label row, OR the words
-    hm = jnp.asarray(hop_mask)
-    rows = jnp.asarray(_padded_rows(tgt, pad))
-    pruned = jnp.bitwise_or.reduce(hm[rows], axis=1)  # [n, wm]
+    @jax.jit
+    def wave_step(L_src, L_tgt, len_tgt, members, valid, ranks):
+        wordj = jnp.asarray(word)
+        bitj = jnp.asarray(bit)
 
-    # 2. fixpoint masked reach: one bitset_mm per BFS level, all members at once
-    start = np.zeros((n, wm), dtype=np.uint32)
-    start[members, word] = bit
-    visited = jnp.asarray(start)
-    while True:
-        expand = visited & ~pruned
-        new = visited | bitset_mm(adj_bits, expand, interpret=interpret)
-        if not bool(jnp.any(new != visited)):
-            break
-        visited = new
+        # 1. hop_mask[h] = member words of members whose prune row holds h.
+        #    Scatter-ADD is exact: each (member, hop) pair is unique, and
+        #    distinct members in one word carry distinct bits, so add == OR.
+        #    Row n stays zero (gather parking); row n+1 absorbs the scatter
+        #    parking of padded member slots and INVALID label entries.
+        rows_src = L_src[jnp.where(valid, members, 0)]  # [w, l_max]
+        hops = jnp.where(valid[:, None] & (rows_src != INVALID), rows_src, n + 1)
+        hop_mask = jnp.zeros((n + 2, wm), dtype=jnp.uint32)
+        hop_mask = hop_mask.at[hops, wordj[:, None]].add(bitj[:, None])
 
-    # 3. labeled = visited & ~pruned -> host append (output-sized traffic)
-    labeled = np.asarray(visited & ~pruned)
-    masks = bitset.words_u32_to_u64(labeled)
-    verts = np.flatnonzero(masks.any(axis=1))
-    if verts.size == 0:
-        return
-    bits = masks[verts]
-    _, member, counts = bitset.expand_member_bits(bits, w)
-    tgt.append(verts, counts, ranks[member])
+        # 2. static prune verdicts: gather every vertex's label row, OR words
+        tgt_hops = jnp.where(L_tgt != INVALID, L_tgt, n)  # [n, l_max]
+        pruned = jnp.bitwise_or.reduce(hop_mask[tgt_hops], axis=1)  # [n, wm]
+
+        # 3. fixpoint masked reach — a device while_loop, no host syncs
+        start_rows = jnp.where(valid, members, n)  # n = out of bounds -> drop
+        visited0 = jnp.zeros((n, wm), dtype=jnp.uint32).at[start_rows, wordj].add(
+            bitj, mode="drop"
+        )
+
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            v, _ = state
+            new = v | expand(v & ~pruned)
+            return new, jnp.any(new != v)
+
+        visited, _ = jax.lax.while_loop(cond, body, (visited0, jnp.bool_(True)))
+
+        # 4. segment-scatter append: member bits -> (row, lens + prefix) cols
+        labeled = visited & ~pruned  # [n, wm]
+        bits_u = (labeled[:, word] >> jnp.asarray(np.arange(w) % 32, jnp.uint32)) & 1
+        on = bits_u.astype(bool)  # [n, w]
+        prefix = jnp.cumsum(bits_u, axis=1, dtype=jnp.int32) - bits_u.astype(jnp.int32)
+        pos = len_tgt[:, None] + prefix
+        cols = jnp.where(on, pos, l_max)  # l_max is out of bounds -> drop
+        row_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
+        L_tgt = L_tgt.at[row_ids, cols].set(
+            jnp.broadcast_to(ranks[None, :], (n, w)), mode="drop"
+        )
+        overflow = jnp.any(on & (pos >= l_max))
+        len_tgt = len_tgt + bits_u.astype(jnp.int32).sum(axis=1)
+        return L_tgt, len_tgt, overflow
+
+    return wave_step
 
 
-def distribution_labeling_wave_jax(
+def _finalize_side(L, lens, n) -> np.ndarray:
+    """Device label matrix -> the reference builder's byte layout (rows
+    ascending, INVALID padded, width = next multiple of 8, min 8)."""
+    lens = np.asarray(lens)
+    lmax = int(lens.max()) if n else 1
+    width = max(((max(lmax, 1) + 7) // 8) * 8, 8)
+    mat = np.asarray(L[:, :width])
+    if mat.shape[1] < width:  # small l_max that never overflowed: pad out
+        pad = np.full((mat.shape[0], width - mat.shape[1]), INVALID, dtype=np.int32)
+        mat = np.concatenate([mat, pad], axis=1)
+    return sort_label_rows(mat)
+
+
+def distribution_labeling_device(
     g: CSRGraph,
     order: Optional[np.ndarray] = None,
     order_name: str = "degree_product",
     max_wave: int = 64,
+    l_max: int = 16,
+    ell_width: int = 16,
+    expand: str = "auto",
     interpret: bool | None = None,
+    block_n: int = 128,
+    mesh=None,
+    waves: Optional[np.ndarray] = None,
 ) -> ReachabilityOracle:
-    """Full device wave build (host loop over waves, device sweeps)."""
+    """Full sparse device wave build (host loop over waves, device sweeps).
+
+    ``expand="pallas"`` drives the frontier through the Pallas ELL kernel
+    (interpret mode off-TPU), ``"xla"`` through the equivalent jnp gather;
+    ``"auto"`` picks pallas on TPU and xla elsewhere.  ``l_max`` is the
+    starting label-matrix width — overflowing waves grow it geometrically
+    and re-run (appends are functional, so a re-run is exact).
+    """
     import jax
     import jax.numpy as jnp
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if expand == "auto":
+        expand = "pallas" if jax.default_backend() == "tpu" else "xla"
     n = g.n
     if n == 0:
         return finalize_labels([], [], hop_rank=np.empty(0, dtype=np.int32))
     if order is None:
         order = get_order(g, order_name)
     order = np.asarray(order, dtype=np.int64)
+    if waves is None:
+        waves = wave_schedule(g, order, max_wave=max_wave)
+    # the static member width follows the ACTUAL schedule (a caller may hand
+    # in waves cut at a different cap), rounded to whole uint32 words
+    max_wave = int(max(int(np.max(waves)) if waves.size else 1, 1))
+    max_wave = ((max_wave + 31) // 32) * 32 if max_wave > 32 else max_wave
     g_rev = g.reverse()
-    waves = wave_schedule(g, order, max_wave=max_wave)
 
-    # reverse pass expands u -> in-neighbors w (edge w->u): A[w, u] = w->u,
-    # i.e. packed OUT-neighbor rows; forward pass symmetric with the reverse
-    # graph's rows
-    a_out = jnp.asarray(bitset.adjacency_bits_u32(g.indptr, g.indices, n))
-    a_in = jnp.asarray(bitset.adjacency_bits_u32(g_rev.indptr, g_rev.indices, n))
+    # reverse pass expands u -> in-neighbors w (edge w -> u): destination-
+    # stationary rows = packed OUT-neighbor slabs; forward pass symmetric
+    # with the reverse graph's rows
+    slabs_out = bitset.ell_slabs(
+        g.indptr.astype(np.int64), g.indices.astype(np.int64), n, width=ell_width
+    )
+    slabs_in = bitset.ell_slabs(
+        g_rev.indptr.astype(np.int64), g_rev.indices.astype(np.int64), n, width=ell_width
+    )
 
-    L_out = _LabelStore(n)
-    L_in = _LabelStore(n)
+    w = int(max_wave)
+    wm = (w + 31) // 32
+    kw = dict(expand_impl=expand, interpret=interpret, block_n=block_n, mesh=mesh)
+    # expansion closures are l_max-independent: built once (slab upload +
+    # trace happen here only); the wave steps rebuild on overflow growth
+    ex_out = _expand_fn(slabs_out[2], slabs_out[1], n, wm, **kw)
+    ex_in = _expand_fn(slabs_in[2], slabs_in[1], n, wm, **kw)
+    step_rev = None  # built lazily per l_max (re-built on overflow growth)
+    step_fwd = None
+
+    L_out = jnp.full((n, l_max), INVALID, dtype=jnp.int32)
+    L_in = jnp.full((n, l_max), INVALID, dtype=jnp.int32)
+    out_len = jnp.zeros(n, dtype=jnp.int32)
+    in_len = jnp.zeros(n, dtype=jnp.int32)
     ranks_of = np.arange(n, dtype=np.int32)
 
     base = 0
     for wlen in waves:
         wlen = int(wlen)
-        members = order[base : base + wlen]
-        ranks = ranks_of[base : base + wlen]
-        _wave_sweep_device(members, ranks, L_in, L_out, a_out, n, interpret)
-        _wave_sweep_device(members, ranks, L_out, L_in, a_in, n, interpret)
+        members = np.full(w, 0, dtype=np.int32)
+        members[:wlen] = order[base : base + wlen]
+        valid = np.zeros(w, dtype=bool)
+        valid[:wlen] = True
+        ranks = np.zeros(w, dtype=np.int32)
+        ranks[:wlen] = ranks_of[base : base + wlen]
+        m_j, v_j, r_j = jnp.asarray(members), jnp.asarray(valid), jnp.asarray(ranks)
+        # reverse then forward: the forward prune set L_out(v_j) must see
+        # the member's own rank, which the reverse sweep just appended
+        for direction in ("rev", "fwd"):
+            while True:
+                if step_rev is None:
+                    step_rev = _make_wave_step(n, w, l_max, ex_out)
+                    step_fwd = _make_wave_step(n, w, l_max, ex_in)
+                if direction == "rev":
+                    res = step_rev(L_in, L_out, out_len, m_j, v_j, r_j)
+                else:
+                    res = step_fwd(L_out, L_in, in_len, m_j, v_j, r_j)
+                if not bool(res[2]):  # overflow flag: one scalar per sweep
+                    break
+                # grow the label matrices and re-run this sweep (the old
+                # operands were not donated, so the re-run is exact)
+                l_max *= 2
+                grow = functools.partial(
+                    jnp.pad, pad_width=((0, 0), (0, l_max // 2)),
+                    constant_values=INVALID,
+                )
+                L_out, L_in = grow(L_out), grow(L_in)
+                step_rev = step_fwd = None
+            if direction == "rev":
+                L_out, out_len = res[0], res[1]
+            else:
+                L_in, in_len = res[0], res[1]
         base += wlen
 
     return ReachabilityOracle(
-        L_out=L_out.finalize(),
-        L_in=L_in.finalize(),
-        out_len=L_out.lens,
-        in_len=L_in.lens,
+        L_out=_finalize_side(L_out, out_len, n),
+        L_in=_finalize_side(L_in, in_len, n),
+        out_len=np.asarray(out_len),
+        in_len=np.asarray(in_len),
         hop_rank=_hop_rank(order, n),
     )
+
+
+# backwards-compatible alias (the dense demonstrator's public name)
+distribution_labeling_wave_jax = distribution_labeling_device

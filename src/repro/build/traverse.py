@@ -9,7 +9,7 @@ the backbone builder import from this module.
 from __future__ import annotations
 
 from collections import deque
-from typing import List, Sequence, Set
+from typing import List, Set
 
 import numpy as np
 
@@ -143,22 +143,23 @@ def khop_out(g, v: int, k: int) -> Set[int]:
     return out
 
 
-def inherit_labels(
-    gv: int,
-    neighbor_globals: Sequence[int],
-    backbone_locals: Sequence[int],
-    to_global: np.ndarray,
-    label_sets: List[Set[int]],
-) -> Set[int]:
-    """One side of HL's level-wise labeling (Formulas 4/5):
+def batched_union_rows(
+    keys: np.ndarray, vals: np.ndarray, n_rows: int, domain: int
+) -> List[np.ndarray]:
+    """Per-key sorted-unique unions, one vectorized pass.
 
-        L(v) = {v}  u  N1(v|G_i)  u  U_{u in B(v)} L(u)
-
-    ``core/hierarchy.py`` previously spelled this out twice (once per
-    direction); both call sites now share this helper.
+    (keys[t], vals[t]) pairs — vals in [0, domain) — collapse to a list of
+    ``n_rows`` sorted unique int32 arrays (row k = union of vals with
+    keys == k).  This is HL's level-wise label union (Formulas 4/5): all
+    rows of a level are independent (they inherit only from higher-level
+    backbone labels), so the whole level collapses into ONE np.unique over
+    key-fused ints instead of a python set union per vertex — the last
+    copy-pasted scalar traversal ``core/hierarchy.py`` carried.  The
+    neighbor/backbone gathers feeding it come from ``bitset.csr_gather``,
+    the same primitive the wave sweeps expand frontiers with.
     """
-    lab: Set[int] = {gv}
-    lab.update(int(w) for w in neighbor_globals)
-    for u in backbone_locals:
-        lab.update(label_sets[int(to_global[u])])
-    return lab
+    fused = np.unique(keys.astype(np.int64) * np.int64(domain) + vals.astype(np.int64))
+    k = fused // domain
+    v = (fused % domain).astype(np.int32)
+    starts = np.searchsorted(k, np.arange(n_rows + 1, dtype=np.int64))
+    return [v[starts[i] : starts[i + 1]] for i in range(n_rows)]

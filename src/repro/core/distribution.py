@@ -11,11 +11,16 @@ For each vertex v_i:
 
 Theorem 3: complete.  Theorem 4: non-redundant (no hop can be removed).
 
-Construction is owned by the ``repro.build`` engine: ``impl="wave"``
-(default) runs the wave-scheduled bit-parallel sweep, ``impl="reference"``
-the seed scalar sets+deque path — both produce byte-identical labels (the
-engine's differential tests assert this).  The device/sharded formulation
-lives in ``distribution_jax.py``; the serve path in ``repro.serve``.
+Construction is owned by the ``repro.build`` engine: ``impl="wave"`` runs
+the wave-scheduled bit-parallel sweep, ``impl="device"`` the sparse device
+wave engine (ELL frontier expansion + on-device label append),
+``impl="reference"`` the seed scalar sets+deque path — all produce
+byte-identical labels (the engine's differential tests assert this).
+``impl="auto"`` (default) probes the wave schedule and picks: reference on
+small/dense-reachability graphs, the device engine when an accelerator is
+attached, the host wave engine otherwise.  The per-vertex device/sharded
+formulation lives in ``distribution_jax.py``; the serve path in
+``repro.serve``.
 """
 from __future__ import annotations
 

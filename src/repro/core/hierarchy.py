@@ -18,11 +18,12 @@ All hop ids in the final labels are global (G_0) vertex ids.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Set
+from typing import List
 
 import numpy as np
 
-from repro.build.traverse import inherit_labels, khop_out as _khop_out
+from repro.build import bitset
+from repro.build.traverse import batched_union_rows, khop_out as _khop_out
 from repro.core.backbone import Backbone, one_side_backbone
 from repro.core.distribution import distribution_labeling
 from repro.core.oracle import ReachabilityOracle, finalize_labels
@@ -57,9 +58,12 @@ def decompose(g: CSRGraph, eps: int = 2, core_max: int = 1024, max_levels: int =
     return Hierarchy(levels=levels, to_global=to_global, backbones=backbones)
 
 
-def _backbone_sets(g_i: CSRGraph, in_vstar: np.ndarray, v: int, eps: int):
+def _backbone_sets(g_i: CSRGraph, g_rev: CSRGraph, in_vstar: np.ndarray,
+                   v: int, eps: int):
     """(B_out, B_in) per Formulas 1/2: backbone vertices within eps of v,
-    pruned when another candidate lies between (d(v,x)<=eps ^ d(x,u)<=eps)."""
+    pruned when another candidate lies between (d(v,x)<=eps ^ d(x,u)<=eps).
+    ``g_rev`` is the caller-hoisted reverse of ``g_i`` (this runs per
+    vertex; rebuilding the reverse CSR each call dominated the level)."""
     cand_out = [u for u in _khop_out(g_i, v, eps) if in_vstar[u]]
     pruned_out: List[int] = []
     if cand_out:
@@ -68,7 +72,6 @@ def _backbone_sets(g_i: CSRGraph, in_vstar: np.ndarray, v: int, eps: int):
             if not any(x != u and u in reach2[x] for x in cand_out):
                 pruned_out.append(u)
 
-    g_rev = g_i.reverse()
     cand_in = [u for u in _khop_out(g_rev, v, eps) if in_vstar[u]]
     pruned_in: List[int] = []
     if cand_in:
@@ -100,18 +103,19 @@ def hierarchical_labeling(
     h = hier.h
     n = g.n
 
-    out_sets: List[Set[int]] = [set() for _ in range(n)]
-    in_sets: List[Set[int]] = [set() for _ in range(n)]
+    empty = np.empty(0, dtype=np.int32)
+    out_rows: List[np.ndarray] = [empty] * n  # sorted unique global hop ids
+    in_rows: List[np.ndarray] = [empty] * n
 
     # ---- core labeling (global hop ids) ----
     core = hier.levels[h]
-    core_glob = hier.to_global[h]
+    core_glob = hier.to_global[h].astype(np.int32)
     if core_method == "formula3":
         c_out, c_in = core_labels_formula3(core, eps)
         for lv in range(core.n):
             gv = int(core_glob[lv])
-            out_sets[gv] = {int(core_glob[x]) for x in c_out[lv]}
-            in_sets[gv] = {int(core_glob[x]) for x in c_in[lv]}
+            out_rows[gv] = np.sort(core_glob[np.asarray(c_out[lv], dtype=np.int64)])
+            in_rows[gv] = np.sort(core_glob[np.asarray(c_in[lv], dtype=np.int64)])
     else:
         core_oracle = distribution_labeling(core)
         for lv in range(core.n):
@@ -120,27 +124,45 @@ def hierarchical_labeling(
             # before lifting to global ids
             row_o = core_oracle.unrank(core_oracle.L_out[lv, : core_oracle.out_len[lv]])
             row_i = core_oracle.unrank(core_oracle.L_in[lv, : core_oracle.in_len[lv]])
-            out_sets[gv] = {int(core_glob[x]) for x in row_o}
-            in_sets[gv] = {int(core_glob[x]) for x in row_i}
+            out_rows[gv] = np.sort(core_glob[row_o])
+            in_rows[gv] = np.sort(core_glob[row_i])
 
     # ---- level-wise labeling h-1 .. 0 (Formulas 4/5) ----
+    # All vertices of a level are independent (labels inherit only from
+    # higher-level backbone rows and plain neighbor IDS), so each side of a
+    # level is ONE batched union over (vertex, hop) pairs — the gathers run
+    # through the wave sweeps' csr_gather, the union through
+    # ``traverse.batched_union_rows``; no per-vertex python set work.
     for i in range(h - 1, -1, -1):
         g_i = hier.levels[i]
-        glob_i = hier.to_global[i]
+        glob_i = hier.to_global[i].astype(np.int32)
         bb = hier.backbones[i]
         in_vstar = np.zeros(g_i.n, dtype=bool)
         in_vstar[bb.vstar] = True
         g_i_rev = g_i.reverse()
-        for lv in range(g_i.n):
-            if in_vstar[lv]:
-                continue  # labeled at a higher level
-            gv = int(glob_i[lv])
-            b_out, b_in = _backbone_sets(g_i, in_vstar, lv, eps)
-            out_sets[gv] = inherit_labels(
-                gv, glob_i[g_i.out_neighbors(lv)], b_out, glob_i, out_sets
+        lvs = np.flatnonzero(~in_vstar).astype(np.int64)
+        if lvs.size == 0:
+            continue
+        b_out_all, b_in_all = zip(*(_backbone_sets(g_i, g_i_rev, in_vstar,
+                                                   int(lv), eps) for lv in lvs))
+        for rows, g_dir, b_all in (
+            (out_rows, g_i, b_out_all),
+            (in_rows, g_i_rev, b_in_all),
+        ):
+            nbrs, seg = bitset.csr_gather(
+                g_dir.indptr.astype(np.int64), g_dir.indices.astype(np.int64), lvs
             )
-            in_sets[gv] = inherit_labels(
-                gv, glob_i[g_i_rev.out_neighbors(lv)], b_in, glob_i, in_sets
+            keys = [np.arange(lvs.size, dtype=np.int64), seg]
+            vals = [glob_i[lvs], glob_i[nbrs]]  # {v} u N1(v|G_i)
+            for k, b_locals in enumerate(b_all):  # u U_{u in B(v)} L(u)
+                for u in b_locals:
+                    row = rows[int(glob_i[u])]
+                    keys.append(np.full(row.shape[0], k, dtype=np.int64))
+                    vals.append(row)
+            level_rows = batched_union_rows(
+                np.concatenate(keys), np.concatenate(vals), lvs.size, n
             )
+            for k, lv in enumerate(lvs):
+                rows[int(glob_i[lv])] = level_rows[k]
 
-    return finalize_labels([sorted(s) for s in out_sets], [sorted(s) for s in in_sets])
+    return finalize_labels(out_rows, in_rows)

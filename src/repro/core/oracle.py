@@ -149,7 +149,17 @@ class ReachabilityOracle:
     # ---------------- device arrays ----------------
 
     def device_labels(self):
-        return jnp.asarray(self.L_out), jnp.asarray(self.L_in)
+        """Device copies of the label matrices, memoized per snapshot.
+
+        Snapshots are immutable, so the first upload is cached on the
+        instance: pinned-epoch serving (``repro.dynamic.versioned``) reads
+        the SAME device arrays for the lifetime of the epoch instead of
+        re-uploading per pin."""
+        cached = getattr(self, "_device_labels", None)
+        if cached is None:
+            cached = (jnp.asarray(self.L_out), jnp.asarray(self.L_in))
+            object.__setattr__(self, "_device_labels", cached)
+        return cached
 
 
 def finalize_labels(
@@ -173,7 +183,7 @@ def finalize_labels(
         lmax = max(((lmax + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple, pad_to_multiple)
         mat = np.full((n, lmax), INVALID, dtype=np.int32)
         for i, row in enumerate(lists):
-            if row:
+            if len(row):  # rows may be python lists OR numpy arrays
                 vals = np.asarray(row, dtype=np.int32)
                 if hop_rank is not None:
                     vals = hop_rank[vals]

@@ -66,6 +66,8 @@ class MutableLabels:
         self.dirty_in: Set[int] = set()
         self.appends = 0
         self.drops = 0
+        self._mark_appends = 0
+        self._mark_drops = 0
         # witness tally: how many rows reference each hop rank
         self.tally_out = np.zeros(self.n, dtype=np.int64)
         self.tally_in = np.zeros(self.n, dtype=np.int64)
@@ -152,6 +154,15 @@ class MutableLabels:
             (self.dirty_out if side == "out" else self.dirty_in).add(vertex)
             self.drops += dropped
         return dropped
+
+    def epoch_counters(self) -> tuple[int, int]:
+        """(appends, drops) accumulated since the previous call — the
+        per-epoch churn window ``versioned.DynamicOracle`` logs so label
+        growth (rank drift under churn) is measurable per publish."""
+        a = self.appends - self._mark_appends
+        d = self.drops - self._mark_drops
+        self._mark_appends, self._mark_drops = self.appends, self.drops
+        return a, d
 
     def take_dirty(self) -> tuple[Dict[int, List[int]], Dict[int, List[int]]]:
         """Dirty rows since the last publish (and reset the dirty sets)."""

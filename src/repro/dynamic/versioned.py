@@ -21,7 +21,15 @@ The serving contract under churn:
 
 Query routing: the current epoch serves through the QueryEngine (all
 backends, prefilters, bucketing); older pinned epochs serve through their
-snapshot's host path — they exist for consistency, not throughput.
+snapshot's retained device arrays (prefilters + one batched device
+intersect — see ``LabelEpoch``), with the scalar host merge kept only as a
+differential-test path.
+
+Observability: every publish appends to ``growth_log`` — label-int count,
+appends/drops of the epoch window, and the per-epoch growth rate.  Rank
+drift under churn (repairs distribute hops at stale build-time ranks) shows
+up as a persistently positive growth rate long before the staleness budget
+fires; BENCH_dynamic.json surfaces it.
 """
 from __future__ import annotations
 
@@ -43,19 +51,39 @@ from repro.serve.prefilter import apply_prefilters, topo_levels
 
 @dataclasses.dataclass(frozen=True)
 class LabelEpoch:
-    """One immutable published snapshot."""
+    """One immutable published snapshot.
+
+    The snapshot's device label arrays stay ALIVE for as long as the epoch
+    is pinnable (``ReachabilityOracle.device_labels`` memoizes the upload on
+    the immutable oracle), so pinned-epoch batches run the same prefilter +
+    device-intersect path as the current epoch instead of falling back to a
+    per-query host merge — pinning costs one upload per epoch, not one per
+    pin."""
     epoch: int
     oracle: ReachabilityOracle
     comp: np.ndarray     # original vertex -> condensation id, frozen copy
     level: np.ndarray    # topological levels of the condensation, frozen
 
-    def query_batch(self, queries: np.ndarray) -> np.ndarray:
-        """Host-path batch answers in ORIGINAL vertex ids (pinned epoch)."""
+    def query_batch(self, queries: np.ndarray, device: bool = True) -> np.ndarray:
+        """Batch answers in ORIGINAL vertex ids (pinned epoch).
+
+        ``device=False`` forces the old per-query host merge (kept for
+        differential tests)."""
         cq = self.comp[np.asarray(queries, dtype=np.int64)].astype(np.int32)
         o = self.oracle
         pf = apply_prefilters(cq, o.out_len, o.in_len, self.level)
         out = pf.decided & pf.value
         rest = np.nonzero(~pf.decided)[0]
+        if rest.size == 0:
+            return out
+        if device:
+            import jax.numpy as jnp
+
+            from repro.serve.engine import serve_step
+
+            lo, li = o.device_labels()  # memoized: no per-pin re-upload
+            out[rest] = np.asarray(serve_step(lo, li, jnp.asarray(cq[rest])))
+            return out
         for i in rest:
             out[i] = o.query(int(cq[i, 0]), int(cq[i, 1]))
         return out
@@ -115,7 +143,11 @@ class DynamicOracle:
         self._churn = 0
         self.rebuild_count = 0
         self.repair_count = 0
+        # per-publish label-ints trajectory (rank-drift observability)
+        self.growth_log: List[dict] = []
+        self._last_ints = 0
         self._rebuild_labels()
+        self._last_ints = self.labels.label_ints()
         self._epochs: "OrderedDict[int, LabelEpoch]" = OrderedDict()
         self._epoch = 0
         self.engine = QueryEngine(
@@ -233,12 +265,31 @@ class DynamicOracle:
 
     def publish(self) -> int:
         """Publish the working state as a new immutable epoch."""
-        if self._rebuild_pending:
+        rebuilt = self._rebuild_pending
+        # read the epoch window's churn BEFORE a rebuild swaps in a fresh
+        # MutableLabels (whose counters start at zero) — rebuild epochs are
+        # exactly the churn-heaviest ones
+        appends, drops = self.labels.epoch_counters()
+        if rebuilt:
             self._rebuild_labels()
         oracle = self._snapshot_oracle()
         self._epoch += 1
         self._install_epoch(oracle)
         self.engine.refresh(oracle, level=self.level, epoch=self._epoch)
+        # growth-rate tracking: a persistently positive rate under churn is
+        # rank drift (repairs distribute at stale build-time ranks) and
+        # argues for re-ranking before the staleness budget fires
+        ints = self.labels.label_ints()
+        prev = max(self._last_ints, 1)
+        self.growth_log.append({
+            "epoch": self._epoch,
+            "label_ints": ints,
+            "appends": appends,
+            "drops": drops,
+            "rebuilt": rebuilt,
+            "growth_rate": round((ints - self._last_ints) / prev, 6),
+        })
+        self._last_ints = ints
         return self._epoch
 
     # -------------------------------------------------------------- serve

@@ -143,6 +143,42 @@ def is_dag(g: CSRGraph) -> bool:
     return seen == g.n
 
 
+def topo_levels(g: CSRGraph) -> np.ndarray:
+    """int32[n] longest-path level of each DAG vertex (sources = 0).
+
+    Level-synchronous Kahn rounds, all-numpy: a vertex's in-degree hits
+    zero exactly when its last predecessor's round finishes, so the round
+    it enters the frontier IS its longest-path level.  ``u -> v`` (u != v)
+    implies ``level[u] < level[v]`` — the serve-path prefilter's invariant.
+    """
+    n = g.n
+    indptr = g.indptr.astype(np.int64)
+    indices = g.indices.astype(np.int64)
+    indeg = np.bincount(indices, minlength=n)
+    level = np.zeros(n, dtype=np.int32)
+    frontier = np.flatnonzero(indeg == 0)
+    lv = 0
+    seen = frontier.size
+    while frontier.size:
+        starts = indptr[frontier]
+        counts = indptr[frontier + 1] - starts
+        total = int(counts.sum())
+        lv += 1
+        if total == 0:
+            break
+        cum = np.cumsum(counts)
+        offs = np.repeat(starts - (cum - counts), counts) + np.arange(total, dtype=np.int64)
+        nbrs = indices[offs]
+        indeg -= np.bincount(nbrs, minlength=n)
+        uniq = np.unique(nbrs)
+        frontier = uniq[indeg[uniq] == 0]
+        level[frontier] = lv
+        seen += frontier.size
+    if seen != n:
+        raise ValueError("graph has a cycle")
+    return level
+
+
 def topological_order(g: CSRGraph) -> np.ndarray:
     """Topological order of a DAG (raises on cycles). int32[n]: order[i] = i-th vertex."""
     indeg = g.in_degree().astype(np.int64)

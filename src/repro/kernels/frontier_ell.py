@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: packed-frontier OR-gather over ELL neighbor slabs.
+
+out[i, :] = OR_{s : nbr[i, s] != INVALID}  F[nbr[i, s], :]      (uint32 words)
+
+One BFS level of the sparse device wave engine (``build/engine_jax.py``):
+``F`` is the packed member-frontier word matrix (bit j of word k = "wave
+member 64k+j's BFS currently expands here"), ``nbr`` one destination-
+stationary ELL slab.  This generalizes ``ell_spmm.py``'s tiling from
+(f32 gather, +, *) to (uint32 gather, OR, select): TPUs have no scatter
+atomics, so the schedule is inverted — each grid step owns a (TN)-row
+destination tile whose padded neighbor ids live in VMEM, and frontier rows
+are pulled from F (kept whole in ANY/HBM space) with dynamic row slices,
+one neighbor slot at a time, OR-accumulating into a VMEM uint32 tile.
+
+Unlike ``bitset_mm.py`` (whose A operand is a dense packed n x n/32 bit
+matrix — closure-sized memory), the slab rows are int32 neighbor IDS: the
+operand footprint is O(edges), which is what lets the wave engine run at
+graph scale without materializing adjacency bits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INVALID = -1
+
+
+def _frontier_or_kernel(nbr_ref, f_ref, o_ref, *, block_n, max_deg):
+    nbr = nbr_ref[...]  # int32[TN, d]
+    acc = jnp.zeros_like(o_ref)  # uint32[TN, WM]
+
+    def slot_body(s, acc):
+        def row_body(i, acc):
+            idx = nbr[i, s]
+            safe = jnp.where(idx == INVALID, 0, idx)
+            row = pl.load(f_ref, (pl.dslice(safe, 1), slice(None)))  # [1, WM]
+            val = jnp.where(idx == INVALID, jnp.uint32(0), row[0])
+            return acc.at[i].set(acc[i] | val)
+
+        return jax.lax.fori_loop(0, block_n, row_body, acc)
+
+    acc = jax.lax.fori_loop(0, max_deg, slot_body, acc)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def frontier_or_pallas(
+    nbr: jnp.ndarray,  # int32[r, d]  ELL slab, INVALID-padded
+    f: jnp.ndarray,    # uint32[n_src, WM]  packed frontier words
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    r, d = nbr.shape
+    n_src, wm = f.shape
+    assert r % block_n == 0, (r, block_n)
+    grid = (r // block_n,)
+    kernel = functools.partial(_frontier_or_kernel, block_n=block_n, max_deg=d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec(f.shape, lambda i: (0, 0)),  # whole F visible (ANY/HBM)
+        ],
+        out_specs=pl.BlockSpec((block_n, wm), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, wm), jnp.uint32),
+        interpret=interpret,
+    )(nbr, f)

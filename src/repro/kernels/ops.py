@@ -17,6 +17,7 @@ from repro.kernels.bitset_mm import bitset_mm_pallas
 from repro.kernels.ell_spmm import ell_spmm_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.frontier_ell import frontier_or_pallas
 from repro.kernels.label_intersect import label_intersect_pallas
 
 INVALID = -1
@@ -100,6 +101,21 @@ def flash_attention(
         block_q=bq, block_k=bk, interpret=interpret,
     )
     return out[:, :S].reshape(B, Hq, S, D)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def frontier_or(nbr, f, block_n: int = 128, interpret: bool | None = None):
+    """Packed-frontier ELL OR-gather: int32[r, d], uint32[n_src, WM] ->
+    uint32[r, WM] (one BFS level of the sparse device wave engine)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    r = nbr.shape[0]
+    if r == 0:
+        return jnp.zeros((0, f.shape[1]), dtype=jnp.uint32)
+    bn = min(block_n, r) if r % min(block_n, r) == 0 else r
+    nbrp = _pad_axis(nbr, 0, bn, INVALID)
+    out = frontier_or_pallas(nbrp, f, block_n=bn, interpret=interpret)
+    return out[:r]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -27,22 +27,18 @@ import dataclasses
 
 import numpy as np
 
-from repro.graph.csr import CSRGraph, topological_order
+from repro.graph.csr import CSRGraph, topo_levels as _topo_levels_np
 
 
 def topo_levels(g: CSRGraph) -> np.ndarray:
     """int32[n] longest-path level of each DAG vertex (sources = 0).
 
     u -> v (u != v) implies level[u] < level[v]; the contrapositive is the
-    serve-path filter.
+    serve-path filter.  Vectorized in ``graph.csr.topo_levels`` (the scalar
+    python walk this used to do was a visible slice of every dynamic-oracle
+    rebuild publish).
     """
-    level = np.zeros(g.n, dtype=np.int32)
-    for v in topological_order(g):
-        lv = level[v] + 1
-        for w in g.out_neighbors(v):
-            if level[w] < lv:
-                level[w] = lv
-    return level
+    return _topo_levels_np(g)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -82,19 +82,56 @@ def test_wave_handles_small_wave_caps(rng):
 
 
 def test_wave_schedule_members_mutually_unreachable(rng):
-    """Soundness of the certificate: no wave member reaches another."""
+    """Soundness of the certificate: no wave member reaches another —
+    both schedulers."""
     for name, g in _dag_families(rng):
         order = np.argsort(-g.out_degree().astype(np.int64), kind="stable").astype(np.int64)
-        waves = wave_schedule(g, order)
-        assert int(waves.sum()) == g.n, name
-        base = 0
-        for wlen in waves:
-            members = order[base : base + int(wlen)]
-            for v in members:
-                reach = reachable_set(g, int(v))
-                others = members[members != v]
-                assert not reach[others].any(), (name, int(v))
-            base += int(wlen)
+        for scheduler in ("onepass", "blocked"):
+            waves = wave_schedule(g, order, scheduler=scheduler)
+            assert int(waves.sum()) == g.n, (name, scheduler)
+            base = 0
+            for wlen in waves:
+                members = order[base : base + int(wlen)]
+                for v in members:
+                    reach = reachable_set(g, int(v))
+                    others = members[members != v]
+                    assert not reach[others].any(), (name, scheduler, int(v))
+                base += int(wlen)
+
+
+def test_onepass_schedule_equals_blocked_closure(rng):
+    """Scheduler equivalence: with ``block >= n`` the per-block closure
+    scheduler carves maximal greedy waves with exact conflicts — exactly
+    what the one-pass windowed scheduler produces for ANY block size."""
+    from repro.build.waves import wave_schedule_blocked
+    from repro.core.order import get_order
+
+    for name, g in _dag_families(rng):
+        order = get_order(g, "degree_product")
+        for max_wave in (2, 7, 64, 256):
+            one = wave_schedule(g, order, max_wave=max_wave)
+            blk = wave_schedule_blocked(
+                g, order, max_wave=max_wave, block=max(g.n, max_wave)
+            )
+            assert np.array_equal(one, blk), (name, max_wave)
+
+
+def test_onepass_schedule_budget_fallback_sound(rng):
+    """A starved edge budget routes through bisection + conflict-with-all
+    (or interval) fallbacks — the schedule must stay sound regardless."""
+    from repro.core.order import get_order
+
+    g = layered_dag(400, avg_out=2.0, seed=5)
+    order = get_order(g, "degree_product")
+    waves = wave_schedule(g, order, exact_budget=40)
+    assert int(waves.sum()) == g.n
+    base = 0
+    for wlen in waves:
+        members = order[base : base + int(wlen)]
+        for v in members:
+            reach = reachable_set(g, int(v))
+            assert not reach[members[members != v]].any(), int(v)
+        base += int(wlen)
 
 
 def test_dfs_intervals_sound(rng):
@@ -167,18 +204,124 @@ def test_pack_bool_rows_u32(rng):
             assert bool((packed[i, j // 32] >> np.uint32(j % 32)) & 1) == mat[i, j]
 
 
+def test_ell_slabs_cover_all_edges(rng):
+    """The degree-sorted slab decomposition lists every edge exactly once
+    (row i of slab s = neighbor slots [s*w, (s+1)*w) of vertex perm[i])."""
+    g = random_dag(90, 400, seed=13)
+    indptr, indices = g.indptr.astype(np.int64), g.indices.astype(np.int64)
+    perm, pos_of, slabs = bitset.ell_slabs(indptr, indices, g.n, width=4)
+    assert np.array_equal(perm[pos_of], np.arange(g.n))
+    per_vertex = {v: [] for v in range(g.n)}
+    for slab in slabs:
+        for i, row in enumerate(slab):
+            per_vertex[int(perm[i])].extend(int(x) for x in row if x != -1)
+    total = 0
+    for v in range(g.n):
+        assert per_vertex[v] == list(g.out_neighbors(v)), v
+        total += len(per_vertex[v])
+    assert total == g.m
+
+
 # ---------------------------------------------------------------------------
-# device engine parity (Pallas OR-AND expansion, interpret mode on CPU)
+# sparse device wave engine (ELL expansion, on-device append)
 # ---------------------------------------------------------------------------
+
+
+def test_device_engine_byte_identical_all_families(rng):
+    """Fast rows: the XLA expansion path (same dataflow the Pallas kernel
+    compiles on TPU) across the five serve-test graph families."""
+    from repro.build.engine_jax import distribution_labeling_device
+
+    for name, g in _dag_families(rng):
+        ref = build_distribution_labels(g, impl="reference")
+        dev = distribution_labeling_device(g, max_wave=32, expand="xla")
+        _assert_identical(ref, dev, name)
+
+
+def test_device_engine_byte_identical_under_order_variants(rng):
+    from repro.build.engine_jax import distribution_labeling_device
+
+    g = random_dag(120, 360, seed=8)
+    for order_name in ("degree_product", "degree_sum", "random"):
+        ref = build_distribution_labels(g, impl="reference", order_name=order_name)
+        dev = distribution_labeling_device(
+            g, order_name=order_name, max_wave=32, expand="xla"
+        )
+        _assert_identical(ref, dev, order_name)
+
+
+def test_device_engine_label_matrix_growth(rng):
+    """A deliberately tiny starting l_max forces the overflow-grow-rerun
+    path; labels must stay byte-identical."""
+    from repro.build.engine_jax import distribution_labeling_device
+
+    g = random_dag(60, 170, seed=7)
+    ref = build_distribution_labels(g, impl="reference")
+    dev = distribution_labeling_device(g, max_wave=16, l_max=2, expand="xla")
+    _assert_identical(ref, dev, "l_max growth")
+    # an l_max below the reference's minimum row width that never overflows
+    # must still finalize to the min-width-8 INVALID-padded layout
+    from repro.graph.csr import from_edges as _fe
+
+    g2 = _fe(3, [0, 1], [1, 2])
+    ref2 = build_distribution_labels(g2, impl="reference")
+    dev2 = distribution_labeling_device(g2, max_wave=4, l_max=4, expand="xla")
+    assert dev2.L_out.shape == ref2.L_out.shape == (3, 8)
+    _assert_identical(ref2, dev2, "min width pad")
+
+
+def test_device_engine_pallas_interpret_row():
+    """One fast interpret-mode row through the actual Pallas ELL kernel."""
+    from repro.build.engine_jax import distribution_labeling_device
+
+    g = random_dag(40, 110, seed=11)
+    ref = build_distribution_labels(g, impl="reference")
+    dev = distribution_labeling_device(
+        g, max_wave=16, expand="pallas", interpret=True
+    )
+    _assert_identical(ref, dev, "pallas interpret")
+
+
+def test_device_engine_sharded_expansion(rng):
+    """The shard_map vertex-sharded expansion (single-device mesh on CPU;
+    the same in/out specs place shards on real meshes)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.build.engine_jax import distribution_labeling_device
+
+    g = layered_dag(80, avg_out=2.5, seed=2)
+    ref = build_distribution_labels(g, impl="reference")
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    dev = distribution_labeling_device(g, max_wave=16, expand="xla", mesh=mesh)
+    _assert_identical(ref, dev, "shard_map mesh")
+
+
+def test_engine_impl_device_routing_and_stats(rng):
+    """impl='device' routes through the engine entry point; every build
+    carries the scheduler-cost breakdown breadcrumb."""
+    g = random_dag(70, 200, seed=1)
+    ref = build_distribution_labels(g, impl="reference")
+    dev = build_distribution_labels(g, impl="device", expand="xla")
+    _assert_identical(ref, dev, "engine impl=device")
+    for o, impl in ((ref, "reference"), (dev, "device")):
+        stats = o.build_stats
+        assert stats["impl"] == impl == o.build_impl
+        assert {"schedule_seconds", "sweep_seconds", "n_waves"} <= set(stats)
+    assert dev.build_stats["scheduler"] == "onepass"
+    assert dev.build_stats["n_waves"] >= 1
 
 
 @pytest.mark.slow
-def test_device_wave_engine_matches_host():
-    from repro.build.engine_jax import distribution_labeling_wave_jax
+def test_device_engine_hardware_parity():
+    """The hardware configuration: Pallas expansion (interpret off-TPU,
+    compiled on TPU), wide waves spanning multiple uint32 words, and the
+    engine-scheduled wave cap."""
+    from repro.build.engine_jax import distribution_labeling_device
 
-    g = random_dag(48, 130, seed=11)
+    g = layered_dag(300, avg_out=1.2, seed=9)
     host = build_distribution_labels(g, impl="wave")
-    dev = distribution_labeling_wave_jax(g, max_wave=32)
+    dev = distribution_labeling_device(g, max_wave=96, expand="pallas")
     _assert_identical(host, dev, "device-vs-host")
 
 

@@ -258,6 +258,48 @@ def test_epoch_pinning_and_retention():
     assert pinned.tolist() == [False, True, False]
 
 
+def test_pinned_epoch_device_path_matches_host_merge(rng):
+    """Pinned epochs serve through their retained device arrays; answers
+    must equal the scalar host merge, and the device upload must be
+    memoized on the snapshot (one upload per epoch, not per pin)."""
+    g = layered_dag(120, avg_out=2.0, seed=7)
+    dyn = DynamicOracle(g)
+    trace = generate_trace(g, rounds=2, updates_per_round=10,
+                           queries_per_round=1, dag_preserving=True, seed=3)
+    replay(dyn, trace)
+    old_epoch = dyn.epochs[0]
+    snap = dyn.snapshot(old_epoch)
+    q = np.stack([rng.integers(0, g.n, 300), rng.integers(0, g.n, 300)], axis=1)
+    dev = snap.query_batch(q, device=True)
+    host = snap.query_batch(q, device=False)
+    assert np.array_equal(dev, host)
+    # serve(epoch=...) routes through the same snapshot path
+    assert np.array_equal(dyn.serve(q, epoch=old_epoch), dev)
+    # memoized device arrays: same objects on every pin
+    lo1, li1 = snap.oracle.device_labels()
+    lo2, li2 = snap.oracle.device_labels()
+    assert lo1 is lo2 and li1 is li2
+
+
+def test_growth_log_tracks_label_ints_per_epoch():
+    g = layered_dag(150, avg_out=2.0, seed=11)
+    dyn = DynamicOracle(g)
+    trace = generate_trace(g, rounds=3, updates_per_round=8,
+                           queries_per_round=1, dag_preserving=True, seed=5)
+    replay(dyn, trace)
+    gl = dyn.growth_log
+    assert len(gl) == dyn.epoch  # one entry per publish
+    for e in gl:
+        assert {"epoch", "label_ints", "appends", "drops", "rebuilt",
+                "growth_rate"} <= set(e)
+    assert gl[-1]["label_ints"] == dyn.labels.label_ints()
+    # growth rate is the relative label-ints delta between publishes
+    ints = [e["label_ints"] for e in gl]
+    for prev, e in zip(ints, gl[1:]):
+        assert e["growth_rate"] == pytest.approx(
+            (e["label_ints"] - prev) / max(prev, 1), abs=1e-5)
+
+
 def test_cow_publish_reuses_clean_rows():
     g = layered_dag(200, avg_out=2.0, seed=3)
     dyn = DynamicOracle(g)
@@ -352,6 +394,34 @@ def test_check_monotone_gate(tmp_path):
     assert check_monotone(fresh(entry(1000, 2.0, reps=1)), committed,
                           serve_path="/nonexistent", dynamic_path="/nonexistent",
                           out=lines.append) == []
+
+    # scheduler share: > 15-point creep fails, smaller wobble passes
+    def sched_entry(share):
+        e = entry(1000, 3.0)
+        e["scheduler"] = {"share_onepass": share}
+        return e
+
+    committed_s = {"ds@1": sched_entry(0.25)}
+    assert check_monotone(fresh(sched_entry(0.33)), committed_s,
+                          serve_path="/nonexistent", dynamic_path="/nonexistent",
+                          out=lines.append) == []
+    assert check_monotone(fresh(sched_entry(0.45)), committed_s,
+                          serve_path="/nonexistent", dynamic_path="/nonexistent",
+                          out=lines.append)
+
+    # device-engine rows gate on byte-identity unconditionally
+    def fresh_dev(match):
+        p = tmp_path / "fresh_dev.json"
+        p.write_text(json.dumps({
+            "datasets": {},
+            "device_engine": {"ds@1": {"labels_match_reference": match}},
+        }))
+        return str(p)
+
+    assert check_monotone(fresh_dev(True), {}, serve_path="/nonexistent",
+                          dynamic_path="/nonexistent", out=lines.append) == []
+    assert check_monotone(fresh_dev(False), {}, serve_path="/nonexistent",
+                          dynamic_path="/nonexistent", out=lines.append)
 
 
 def test_deprecation_shim_warns():

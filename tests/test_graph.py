@@ -2,7 +2,13 @@
 import numpy as np
 import pytest
 
-from repro.graph.csr import CSRGraph, from_edges, is_dag, topological_order
+from repro.graph.csr import (
+    CSRGraph,
+    from_edges,
+    is_dag,
+    topo_levels,
+    topological_order,
+)
 from repro.graph.generators import (
     chain_dag,
     layered_dag,
@@ -57,6 +63,23 @@ def test_generators_are_dags():
         pos[topo] = np.arange(g.n)
         src, dst = g.edges()
         assert (pos[src] < pos[dst]).all()
+
+
+def test_topo_levels_longest_path():
+    """Vectorized topo levels == the scalar longest-path relaxation, and
+    every edge strictly increases the level (the serve-filter invariant)."""
+    for g in (random_dag(200, 600, seed=1), tree_dag(150, branching=3, seed=2),
+              chain_dag(120, seed=3)):
+        level = topo_levels(g)
+        expect = np.zeros(g.n, dtype=np.int32)
+        for v in topological_order(g):
+            for w in g.out_neighbors(v):
+                expect[w] = max(expect[w], expect[v] + 1)
+        assert np.array_equal(level, expect)
+        src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+        assert (level[src] < level[g.indices]).all()
+    with pytest.raises(ValueError):
+        topo_levels(from_edges(3, [0, 1, 2], [1, 2, 0], dedup=False))
 
 
 def test_scc_condensation():

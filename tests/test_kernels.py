@@ -35,6 +35,21 @@ def test_bitset_mm_sweep(n, k, m, rng):
     assert (out == exp).all()
 
 
+@pytest.mark.parametrize("r,d,n_src,wm", [(13, 4, 50, 1), (128, 16, 200, 2), (1, 7, 9, 3)])
+def test_frontier_or_sweep(r, d, n_src, wm, rng):
+    """The packed-frontier ELL OR-gather == a dense per-row OR reference."""
+    nbr = rng.integers(0, n_src, size=(r, d)).astype(np.int32)
+    nbr[rng.random((r, d)) < 0.35] = -1
+    f = rng.integers(0, 2**32, size=(n_src, wm), dtype=np.uint32)
+    out = np.asarray(ops.frontier_or(jnp.asarray(nbr), jnp.asarray(f), block_n=16))
+    exp = np.zeros((r, wm), dtype=np.uint32)
+    for i in range(r):
+        for s in range(d):
+            if nbr[i, s] != -1:
+                exp[i] |= f[nbr[i, s]]
+    assert (out == exp).all()
+
+
 def test_bitset_mm_is_closure_step():
     """one OR-matmul step == one step of transitive closure R |= A.R"""
     from repro.graph.generators import random_dag
