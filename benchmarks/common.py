@@ -153,6 +153,11 @@ def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
         The tolerance is wider than ``tol`` because a ratio divides two
         noisy timings (best-of-N runs still swing ~20% under CI load);
         single-rep (quick / smoke) rows skip the ratio check entirely.
+      * rows the auto-dispatch routed to the SPECULATIVE engine (the
+        dense-reachability families) additionally gate speedup >= 1.0
+        absolutely (reps >= 2 rows only): the speculative path exists to
+        crack the dense wall, and a sub-1.0 ratio means the wall silently
+        reopened — that floor holds regardless of what the trajectory says.
       * when both records carry a scheduler breakdown (reps >= 2), the
         one-pass scheduler's share of the build must not creep up by more
         than 15 percentage points (an absolute slack — shares are ratios of
@@ -173,17 +178,23 @@ def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
     fresh = fresh_all.get("datasets", {})
     compared = 0
     for key, new in fresh.items():
+        # absolute dense-wall floor: no committed baseline required
+        if (new["engine"]["impl"] == "speculative" and new.get("reps", 1) >= 2
+                and new["speedup"] < 1.0):
+            regressions.append(
+                f"{key}: speculative engine fell below the reference builder "
+                f"({new['speedup']:.2f}x < 1.0) — dense-reachability wall reopened")
+        if not new.get("labels_match_reference", False):
+            regressions.append(f"{key}: engine labels no longer byte-identical")
         old = trajectory.get(key)
         if old is None:
             continue
         compared += 1
-        if not new.get("labels_match_reference", False):
-            regressions.append(f"{key}: engine labels no longer byte-identical")
         ni, oi = new["engine"]["label_ints"], old["engine"]["label_ints"]
         if ni > oi * (1 + tol):
             regressions.append(
                 f"{key}: index size regressed {oi} -> {ni} ints (> {tol:.0%})")
-        batched = ("wave", "device")
+        batched = ("wave", "device", "speculative")
         if (new.get("reps", 1) >= 2 and old.get("reps", 1) >= 2
                 and new["engine"]["impl"] in batched
                 and old["engine"]["impl"] in batched):

@@ -28,24 +28,29 @@ from benchmarks.common import (
 
 # (dataset, scale, reps) for the engine-vs-reference record.  Scales are
 # chosen so the reference build takes seconds (stable ratios) while the whole
-# sweep stays CPU-tractable; citeseerx is the deliberately engine-hostile row
-# (dense layered reachability -> tiny waves -> impl="auto" routes to the
-# reference builder).
+# sweep stays CPU-tractable; citeseerx and cit-Patents are the dense-
+# reachability rows (true conflicts every ~1-2 consecutive ranks -> the exact
+# wave scheduler degenerates) that impl="auto" now routes to the SPECULATIVE
+# engine — the rows that used to sit below 1.0x against the reference.
 BUILD_COMPARE = [
     ("citeseer", 0.15, 2),
     ("mapped_100K", 0.12, 2),
     ("uniprotenc_22m", 0.03, 2),
     ("uniprotenc_100m", 0.005, 2),
     ("citeseerx", 0.005, 1),
+    ("cit-Patents", 0.004, 1),
 ]
 BUILD_COMPARE_QUICK = [("citeseer", 0.02, 1)]
 # the medium-cost CI tier: one mid-size dataset at best-of-4, so the
 # --check-monotone speedup-RATIO gate (which skips single-rep rows as too
-# noisy) fires on every PR, not just on full sweeps.  The scale is
-# deliberately distinct from the full grid's 0.03 row: the CI key's
-# baseline lives in the committed BENCH_build_ci.json, measured at the SAME
-# tier (same reps) it is gated at.
-BUILD_COMPARE_CI = [("uniprotenc_22m", 0.035, 4)]
+# noisy) fires on every PR, not just on full sweeps, plus one dense-
+# reachability row (reduced-scale citeseerx analogue) so the speculative
+# engine's speedup >= 1.0 floor and byte-identity are gated on every PR —
+# the dense wall can never silently reopen.  Scales are deliberately
+# distinct from the full grid's rows: each CI key's baseline lives in the
+# committed BENCH_build_ci.json, measured at the SAME tier (same reps) it
+# is gated at.
+BUILD_COMPARE_CI = [("uniprotenc_22m", 0.035, 4), ("citeseerx", 0.002, 2)]
 
 # the sparse device engine column: XLA on CPU hosts runs the same dataflow
 # the TPU path compiles, but emulating the per-wave device sweep costs
@@ -131,11 +136,20 @@ def _engine_vs_reference(out=print, compare=None) -> dict:
             sched["share_blocked"] = round(
                 sched["blocked_seconds"] / max(sched["blocked_seconds"] + sweep, 1e-9), 4)
             entry["scheduler"] = sched
+        spec = stats.get("speculation")
+        if spec is not None:
+            # the dense-wall record: optimistic chunks attempted, how often
+            # certification caught a stale prune set, and what the
+            # corrections cost relative to the whole build
+            entry["speculation"] = dict(spec)
         datasets[key] = entry
+        extra = ""
+        if spec is not None:
+            extra = f";viol_rate={spec.get('violation_rate')}"
         out(csv_row(
             f"build/{key}/engine-vs-ref", t_eng * 1e6,
             f"ref_s={t_ref:.3f};eng_s={t_eng:.3f};speedup={speedup:.2f}x;"
-            f"impl={getattr(o_eng, 'build_impl', '?')};identical={match}",
+            f"impl={getattr(o_eng, 'build_impl', '?')};identical={match}{extra}",
         ))
     return datasets
 
@@ -244,22 +258,30 @@ def _write_json(datasets: dict, device_rows: dict, tier: str, elapsed: float,
 
     speedups = {k: v["speedup"] for k, v in datasets.items()
                 if v["engine"]["impl"] in ("wave", "device")}
+    spec_speedups = {k: v["speedup"] for k, v in datasets.items()
+                     if v["engine"]["impl"] == "speculative"}
     payload = {
         "tier": tier,  # full | quick | ci — the records are self-describing
         "jax_platform": jax.default_backend(),
         "numpy": __import__("numpy").__version__,
         "note": ("engine impl='auto' picks the wave/bitset builder (or the "
-                 "sparse device engine on accelerators) where it pays and "
+                 "sparse device engine on accelerators) where it pays, the "
+                 "SPECULATIVE engine (optimistic chunks + certification + "
+                 "log-based correction) on dense-reachability schedules, and "
                  "the scalar reference otherwise; labels are byte-identical "
-                 "either way.  'scheduler' breaks the build into schedule "
+                 "every way.  'scheduler' breaks the build into schedule "
                  "vs sweep (one-pass windowed vs per-block closure); "
-                 "'device_engine' tracks the sparse device path at reduced "
-                 "scales (interpret/XLA on CPU hosts)."),
+                 "'speculation' records chunks attempted / violation rate / "
+                 "correction cost; 'device_engine' tracks the sparse device "
+                 "path at reduced scales (interpret/XLA on CPU hosts)."),
         "datasets": datasets,
         "device_engine": device_rows,
         "speedup_summary": {
             "wave_datasets_ge_3x": sorted(k for k, s in speedups.items() if s >= 3.0),
             "max_wave_speedup": max(speedups.values(), default=None),
+            "speculative_datasets_ge_1x": sorted(
+                k for k, s in spec_speedups.items() if s >= 1.0),
+            "min_speculative_speedup": min(spec_speedups.values(), default=None),
             "bench_seconds": round(elapsed, 1),
         },
     }

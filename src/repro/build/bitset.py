@@ -93,6 +93,82 @@ def _single_bit_members(sub: np.ndarray) -> np.ndarray:
     return word * 64 + _popcount(val - _U1)
 
 
+def prefix_bits(width: int, k: int | None = None) -> np.ndarray:
+    """uint64[width, k] — row j holds the mask of members i < j.
+
+    The triangular prefix masks the speculative certification pass ANDs
+    against: a violation of member j can only come from a *lower-ranked*
+    wave-mate, so every candidate mask is clipped to bits < j before the
+    touch-matrix intersection."""
+    if k is None:
+        k = n_words(width)
+    j = np.arange(width)
+    out = np.zeros((width, k), dtype=np.uint64)
+    w_idx = j // 64
+    out[np.arange(k)[None, :] < w_idx[:, None]] = np.uint64(0xFFFFFFFFFFFFFFFF)
+    rem = (j % 64).astype(np.uint64)
+    out[j, w_idx] = (_U1 << rem) - _U1
+    return out
+
+
+def touch_matrix(v_bits: np.ndarray, a_bits: np.ndarray, width: int) -> np.ndarray:
+    """uint64[width, K] — row j = OR of ``a_bits`` rows whose ``v_bits`` row
+    has member bit j set.
+
+    This is the label-touched-rows aggregation of the certification pass:
+    with ``v_bits`` and ``a_bits`` both = appended-label masks of the same
+    store rows (``v_bits`` pre-masked to the victim members), row j collects
+    *which members appended a label at some row member j labeled* — the left
+    operand of the violation intersection.  Cost tracks the set bits of
+    ``v_bits``, so callers should pre-mask ``v_bits`` down to the member
+    bits they actually need."""
+    K = a_bits.shape[1]
+    out = np.zeros((width, K), dtype=np.uint64)
+    if v_bits.shape[0] == 0:
+        return out
+    rows, members, _ = expand_member_bits(v_bits, width)
+    if rows.shape[0] == 0:
+        return out
+    keys, orw = group_or(members, a_bits[rows])
+    out[keys] = orw
+    return out
+
+
+def violation_mask(
+    own_rev: np.ndarray,
+    own_fwd: np.ndarray,
+    touch_rev: np.ndarray,
+    touch_fwd: np.ndarray,
+    sides: bool = False,
+) -> np.ndarray:
+    """bool[w] — which members of a speculative wave ran on stale prune sets.
+
+    All four operands are bank-local uint64[w, Kr] masks over the wave's w
+    members.  ``own_rev[j]`` / ``own_fwd[j]`` say which wave-mates appended
+    into member j's own prune-source rows (L_out(v_j) / L_in(v_j)) during
+    the speculative sweep; ``touch_rev[j]`` / ``touch_fwd[j]`` say which
+    wave-mates appended at rows member j's reverse/forward sweep also
+    labeled (``touch_matrix``).  Member j's reverse sweep is violated when
+    some lower-ranked i both entered L_in(v_j) (its prune set was stale)
+    and labeled a row the sweep labeled (the staleness changed a verdict);
+    the forward case is symmetric.  Because the speculative sweep
+    *over*-labels relative to the sequential loop (its wave-start prune
+    sets are subsets of the sequential ones), the mask is exact: every true
+    sequential divergence is flagged, and a member pruned at a touched row
+    anyway is not.
+
+    With ``sides=True`` returns the pair (viol_rev, viol_fwd) instead of
+    their union — violations are per-sweep, so a member stale on one side
+    only needs that side rolled back and replayed."""
+    w = own_rev.shape[0]
+    pref = prefix_bits(w, own_rev.shape[1])
+    viol_rev = ((own_fwd & pref) & touch_rev).any(axis=1)
+    viol_fwd = ((own_rev & pref) & touch_fwd).any(axis=1)
+    if sides:
+        return viol_rev, viol_fwd
+    return viol_rev | viol_fwd
+
+
 def masks_to_matrix(masks: np.ndarray, width: int) -> np.ndarray:
     """uint64[r, K] member masks -> bool[r, width] membership matrix."""
     table = (masks[:, :, None] >> _SHIFTS[None, None, :]) & _U1

@@ -101,16 +101,29 @@ def _expand_fn(slabs, pos_of, n, wm, expand_impl, interpret, block_n, mesh):
     return expand
 
 
-def _make_wave_step(n, w, l_max, expand):
-    """One direction of Algorithm 2 for a whole wave, fully on device."""
+def _make_wave_step(n, w, l_max, expand, prune_cap=None, donate=False):
+    """One direction of Algorithm 2 for a whole wave, fully on device.
+
+    ``prune_cap``: prune verdicts are computed lazily per level for the
+    rows the BFS actually visited — a fixed-size ``prune_cap`` gather when
+    the new frontier fits (cost tracks cone size, not n), falling back to
+    the dense all-rows reduce on levels that visit more.  ``donate=True``
+    donates the target label matrix and length vector into the jit so the
+    append updates in place instead of device-to-device copying the whole
+    matrix every wave; the step returns the pre-wave lengths so an
+    overflowing sweep can be undone (appends only wrote columns past the
+    old watermark) before growing and re-running.
+    """
     import jax
     import jax.numpy as jnp
 
     wm = (w + 31) // 32
     word = np.arange(w, dtype=np.int32) // 32
     bit = np.uint32(1) << (np.arange(w, dtype=np.uint32) % np.uint32(32))
+    if prune_cap is None:
+        prune_cap = max(256, n // 8)
+    prune_cap = min(prune_cap, n)
 
-    @jax.jit
     def wave_step(L_src, L_tgt, len_tgt, members, valid, ranks):
         wordj = jnp.asarray(word)
         bitj = jnp.asarray(bit)
@@ -125,42 +138,127 @@ def _make_wave_step(n, w, l_max, expand):
         hop_mask = jnp.zeros((n + 2, wm), dtype=jnp.uint32)
         hop_mask = hop_mask.at[hops, wordj[:, None]].add(bitj[:, None])
 
-        # 2. static prune verdicts: gather every vertex's label row, OR words
         tgt_hops = jnp.where(L_tgt != INVALID, L_tgt, n)  # [n, l_max]
-        pruned = jnp.bitwise_or.reduce(hop_mask[tgt_hops], axis=1)  # [n, wm]
 
-        # 3. fixpoint masked reach — a device while_loop, no host syncs
+        # 2. fixpoint masked reach — a device while_loop, no host syncs.
+        #    Verdicts are filled in lazily: each level computes them for the
+        #    rows the previous level just visited (frontier-restricted
+        #    gather), so the loop exits only after every visited row has its
+        #    verdict — the final body makes no change, and a no-change body
+        #    computed verdicts for all pending rows before expanding.
         start_rows = jnp.where(valid, members, n)  # n = out of bounds -> drop
         visited0 = jnp.zeros((n, wm), dtype=jnp.uint32).at[start_rows, wordj].add(
             bitj, mode="drop"
         )
+        pruned0 = jnp.zeros((n, wm), dtype=jnp.uint32)
+        computed0 = jnp.zeros(n, dtype=bool)
 
         def cond(state):
-            return state[1]
+            return state[3]
 
         def body(state):
-            v, _ = state
+            v, pruned, computed, _ = state
+            need = (v != 0).any(axis=1) & ~computed
+
+            def sparse(p):
+                # gather only the needy rows' label rows: OOB fill rows
+                # clamp on gather and drop on scatter, so they are inert
+                idx = jnp.nonzero(need, size=prune_cap, fill_value=n)[0]
+                verd = jnp.bitwise_or.reduce(hop_mask[tgt_hops[idx]], axis=1)
+                return p.at[idx].set(verd, mode="drop")
+
+            def dense(p):
+                verd = jnp.bitwise_or.reduce(hop_mask[tgt_hops], axis=1)
+                return jnp.where(need[:, None], verd, p)
+
+            pruned = jax.lax.cond(need.sum() <= prune_cap, sparse, dense, pruned)
+            computed = computed | need
             new = v | expand(v & ~pruned)
-            return new, jnp.any(new != v)
+            return new, pruned, computed, jnp.any(new != v)
 
-        visited, _ = jax.lax.while_loop(cond, body, (visited0, jnp.bool_(True)))
+        visited, pruned, _, _ = jax.lax.while_loop(
+            cond, body, (visited0, pruned0, computed0, jnp.bool_(True))
+        )
 
-        # 4. segment-scatter append: member bits -> (row, lens + prefix) cols
-        labeled = visited & ~pruned  # [n, wm]
+        # 3. segment-scatter append: member bits -> (row, lens + prefix) cols
+        labeled = visited & ~pruned  # [n, wm] (never-visited rows are zero)
         bits_u = (labeled[:, word] >> jnp.asarray(np.arange(w) % 32, jnp.uint32)) & 1
         on = bits_u.astype(bool)  # [n, w]
         prefix = jnp.cumsum(bits_u, axis=1, dtype=jnp.int32) - bits_u.astype(jnp.int32)
         pos = len_tgt[:, None] + prefix
         cols = jnp.where(on, pos, l_max)  # l_max is out of bounds -> drop
         row_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
-        L_tgt = L_tgt.at[row_ids, cols].set(
+        L_new = L_tgt.at[row_ids, cols].set(
             jnp.broadcast_to(ranks[None, :], (n, w)), mode="drop"
         )
         overflow = jnp.any(on & (pos >= l_max))
-        len_tgt = len_tgt + bits_u.astype(jnp.int32).sum(axis=1)
-        return L_tgt, len_tgt, overflow
+        len_new = len_tgt + bits_u.astype(jnp.int32).sum(axis=1)
+        # len_tgt rides through as the pre-wave watermark: the overflow-undo
+        # needs it, and under donation the caller no longer holds it
+        return L_new, len_new, overflow, len_tgt
 
-    return wave_step
+    if donate:
+        return jax.jit(wave_step, donate_argnums=(1, 2))
+    return jax.jit(wave_step)
+
+
+def _make_undo():
+    """Restore a donated label matrix to its pre-wave watermark: appends
+    only ever write columns >= the old row length (which held INVALID), so
+    masking those columns back to INVALID is an exact rollback."""
+    import functools as _ft
+
+    import jax
+    import jax.numpy as jnp
+
+    @_ft.partial(jax.jit, donate_argnums=(0,))
+    def undo(L, len_prev):
+        cols = jnp.arange(L.shape[1], dtype=jnp.int32)[None, :]
+        return jnp.where(cols >= len_prev[:, None], INVALID, L)
+
+    return undo
+
+
+def certification_mask(labeled_rev, visited_rev, labeled_fwd, visited_fwd, members, w):
+    """Device mirror of ``bitset.violation_mask`` — which members of an
+    optimistic wave ran on stale prune sets.
+
+    Inputs are the two sweeps' end-of-wave masks as the device engine
+    already materializes them (uint32[n, ceil(w/32)]; ``labeled`` =
+    ``visited & ~pruned``), plus the wave's member vertex ids.  Because the
+    device engine keeps the sweep directions in separate arrays, member j
+    is bit j in BOTH — no bank offsets — and the violation intersection is
+    the same word math as the host pass: member j's reverse sweep is
+    violated when some lower-ranked wave-mate i both appended into
+    L_in(v_j) (``labeled_fwd[members][j]`` bit i) and labeled a row the
+    reverse sweep visited (touch matrix of ``visited_rev``/``labeled_rev``);
+    forward is symmetric.  Returns bool[w].  This is the schema the device
+    engine will adopt speculative waves through — the wave-step outputs it
+    needs (visited, pruned) already exist on device."""
+    import jax.numpy as jnp
+
+    wm = (w + 31) // 32
+    word = np.arange(w, dtype=np.int32) // 32
+    shift = np.arange(w, dtype=np.uint32) % np.uint32(32)
+    # triangular prefix masks (bits < j), packed uint32[w, wm]
+    jj = np.arange(w)
+    pref_bool = jj[None, :] < jj[:, None]
+    pref = jnp.asarray(bitset.pack_bool_rows_u32(pref_bool))
+
+    def unpack(m):  # uint32[n, wm] -> bool[n, w]
+        return ((m[:, word] >> jnp.asarray(shift)) & 1).astype(bool)
+
+    def touch(v_mask, a_mask):  # T[j] = OR of a_mask rows with v-bit j set
+        vb = unpack(v_mask)  # [n, w]
+        return jnp.bitwise_or.reduce(
+            jnp.where(vb[:, :, None], a_mask[:, None, :], jnp.uint32(0)), axis=0
+        )  # [w, wm]
+
+    own_rev = labeled_rev[members] & pref
+    own_fwd = labeled_fwd[members] & pref
+    t_rev = touch(visited_rev, labeled_rev)
+    t_fwd = touch(visited_fwd, labeled_fwd)
+    return ((own_fwd & t_rev) | (own_rev & t_fwd)).any(axis=1)
 
 
 def _finalize_side(L, lens, n) -> np.ndarray:
@@ -188,6 +286,8 @@ def distribution_labeling_device(
     block_n: int = 128,
     mesh=None,
     waves: Optional[np.ndarray] = None,
+    prune_cap: Optional[int] = None,
+    donate: Optional[bool] = None,
 ) -> ReachabilityOracle:
     """Full sparse device wave build (host loop over waves, device sweeps).
 
@@ -195,7 +295,13 @@ def distribution_labeling_device(
     (interpret mode off-TPU), ``"xla"`` through the equivalent jnp gather;
     ``"auto"`` picks pallas on TPU and xla elsewhere.  ``l_max`` is the
     starting label-matrix width — overflowing waves grow it geometrically
-    and re-run (appends are functional, so a re-run is exact).
+    and re-run after a watermark undo (appends only wrote columns past the
+    pre-wave row lengths, so masking those back to INVALID is exact).
+    ``prune_cap`` bounds the per-level frontier-restricted prune gather
+    (default max(256, n // 8)); ``donate`` donates the target label matrix
+    + lengths into the wave-step jit so appends update in place instead of
+    device-to-device copying the whole matrix every wave (default: on for
+    accelerator backends, off on CPU where XLA ignores donation).
     """
     import jax
     import jax.numpy as jnp
@@ -204,6 +310,8 @@ def distribution_labeling_device(
         interpret = jax.default_backend() != "tpu"
     if expand == "auto":
         expand = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
     n = g.n
     if n == 0:
         return finalize_labels([], [], hop_rank=np.empty(0, dtype=np.int32))
@@ -237,6 +345,7 @@ def distribution_labeling_device(
     ex_in = _expand_fn(slabs_in[2], slabs_in[1], n, wm, **kw)
     step_rev = None  # built lazily per l_max (re-built on overflow growth)
     step_fwd = None
+    undo = _make_undo()  # shape-polymorphic: retraces per l_max as needed
 
     L_out = jnp.full((n, l_max), INVALID, dtype=jnp.int32)
     L_in = jnp.full((n, l_max), INVALID, dtype=jnp.int32)
@@ -259,16 +368,29 @@ def distribution_labeling_device(
         for direction in ("rev", "fwd"):
             while True:
                 if step_rev is None:
-                    step_rev = _make_wave_step(n, w, l_max, ex_out)
-                    step_fwd = _make_wave_step(n, w, l_max, ex_in)
+                    step_rev = _make_wave_step(
+                        n, w, l_max, ex_out, prune_cap=prune_cap, donate=donate)
+                    step_fwd = _make_wave_step(
+                        n, w, l_max, ex_in, prune_cap=prune_cap, donate=donate)
+                # the target matrix + lengths may be donated into the step,
+                # so rebind to the outputs unconditionally — the old buffers
+                # are dead either way, and res[3] carries the pre-wave
+                # lengths an overflow undo needs
                 if direction == "rev":
                     res = step_rev(L_in, L_out, out_len, m_j, v_j, r_j)
+                    L_out, out_len = res[0], res[1]
                 else:
                     res = step_fwd(L_out, L_in, in_len, m_j, v_j, r_j)
+                    L_in, in_len = res[0], res[1]
                 if not bool(res[2]):  # overflow flag: one scalar per sweep
                     break
-                # grow the label matrices and re-run this sweep (the old
-                # operands were not donated, so the re-run is exact)
+                # overflow: watermark-undo the partial appends (they only
+                # wrote columns past the pre-wave lengths), grow the label
+                # matrices, and re-run this sweep
+                if direction == "rev":
+                    L_out, out_len = undo(L_out, res[3]), res[3]
+                else:
+                    L_in, in_len = undo(L_in, res[3]), res[3]
                 l_max *= 2
                 grow = functools.partial(
                     jnp.pad, pad_width=((0, 0), (0, l_max // 2)),
@@ -276,10 +398,6 @@ def distribution_labeling_device(
                 )
                 L_out, L_in = grow(L_out), grow(L_in)
                 step_rev = step_fwd = None
-            if direction == "rev":
-                L_out, out_len = res[0], res[1]
-            else:
-                L_in, in_len = res[0], res[1]
         base += wlen
 
     return ReachabilityOracle(

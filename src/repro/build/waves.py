@@ -327,10 +327,19 @@ class _OnePassState:
 
     def __init__(self, g: CSRGraph, order: np.ndarray, page: int,
                  exact_budget: int, n_traversals: int,
-                 intervals: Optional[Tuple[np.ndarray, np.ndarray]]):
+                 intervals: Optional[Tuple[np.ndarray, np.ndarray]],
+                 blow_limit: int = _BLOW_LIMIT, use_intervals: bool = True,
+                 keep_raw: bool = False):
         self.g = g
         self.order = order
         self.page = page
+        # speculative-schedule mode: a lower circuit breaker, no interval
+        # fallback (optimistic waves don't need conservative certificates),
+        # and raw (un-suffix-minned) pairs kept for wave annotations
+        self.blow_limit = blow_limit
+        self.use_intervals = use_intervals
+        self.keep_raw = keep_raw
+        self.raw: dict = {}  # page -> (lo sorted, hi) raw pairs | "dense" | None
         self.n_total = order.shape[0]
         self.k_words = bitset.n_words(2 * page)
         self.budget = exact_budget
@@ -371,6 +380,7 @@ class _OnePassState:
                 if t:  # a parity's scratch holds exactly one page's bits
                     self.scr[dead % 2][np.concatenate(t)] = 0
                 self.pairs.pop(dead, None)
+                self.raw.pop(dead, None)
             lo = nxt * self.page
             hi = min(lo + self.page, self.n_total)
             if lo < hi:
@@ -388,10 +398,12 @@ class _OnePassState:
         scheduler's hottest line on overlap-heavy tree graphs) ever runs:
         ``_extract_page_pairs`` peels the set bits into sparse pair lists
         once per page."""
-        if self.blown >= _BLOW_LIMIT:
+        if self.blown >= self.blow_limit:
             # closure-hostile graph: stop paying for closures, certify the
-            # rest through the intervals (paid for once below)
-            if self.iv is None:
+            # rest through the intervals (paid for once below).  In
+            # speculative mode there is nothing to certify — unknown ranks
+            # just ride in optimistic waves — so skip the interval DFS too.
+            if self.iv is None and self.use_intervals:
                 self.iv = dfs_intervals(self.g, self.n_traversals)
             self.unknown[ranks] = True
             return
@@ -459,6 +471,8 @@ class _OnePassState:
         # probe then aborts without paying for exact pair lists)
         if int(bitset.popcount_u64(sub).sum()) > 64 * self.page:
             self.pairs[k] = "dense"
+            if self.keep_raw:
+                self.raw[k] = "dense"
             return
         a_out, b_out = [], []
         base = k * self.page
@@ -500,6 +514,8 @@ class _OnePassState:
         lo_s = lo[keep][o]
         hi_s = hi[keep][o]
         self.pairs[k] = (lo_s, np.minimum.accumulate(hi_s[::-1])[::-1])
+        if self.keep_raw:  # actual pairs, pre suffix-min: wave annotations
+            self.raw[k] = (lo_s, hi_s)
 
     def min_break(self, s: int) -> int:
         """Smallest global rank b such that some pair (a, b) has a >= s —
@@ -629,3 +645,136 @@ def wave_schedule(
         if abort_below_avg is not None and pos >= 4096 and pos / len(lengths) < abort_below_avg:
             return None
     return np.asarray(lengths, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# speculative (optimistic) scheduler
+# ---------------------------------------------------------------------------
+
+
+class SpecSchedule:
+    """An optimistic wave partition: exact waves where the closure proved
+    mutual unreachability, max-size *speculative* chunks everywhere else.
+
+    ``lengths`` int64[n_waves] — consecutive rank runs summing to len(order).
+    ``optimistic`` bool[n_waves] — False: proven conflict-free (the engine
+    runs the plain exact sweep, no certification); True: unproven (the
+    engine must certify the sweep and roll back / replay violations).
+    ``pairs`` — per-wave annotation: None for exact waves; for optimistic
+    waves either an int64[p, 2] array of wave-local intra-wave reach pairs
+    the windowed closure already computed (advisory: the certification pass
+    derives the true violation set from the sweep itself) or ``"unknown"``
+    when the closure budget blew / the page was conflict-dense.
+    """
+
+    __slots__ = ("lengths", "optimistic", "pairs", "meta")
+
+    def __init__(self, lengths, optimistic, pairs, meta):
+        self.lengths = np.asarray(lengths, dtype=np.int64)
+        self.optimistic = np.asarray(optimistic, dtype=bool)
+        self.pairs = pairs
+        self.meta = meta
+
+
+def speculative_schedule(
+    g: CSRGraph,
+    order: np.ndarray,
+    max_wave: int = 256,
+    block: int = 256,
+    spec_below: int = 24,
+    exact_budget: Optional[int] = None,
+    blow_limit: int = 8,
+) -> SpecSchedule:
+    """Optimistically partition ``order``: exact waves where they are long
+    enough to amortize the batched sweep, rank-consecutive speculative
+    chunks everywhere else.
+
+    Reuses the one-pass windowed closure machinery, but in a cheap mode
+    tuned for dense-reachability graphs — the exact scheduler's failure
+    case: the closure budget is capped at ~m/4 edges (a page whose cones
+    swallow the whole graph aborts fast instead of completing a useless
+    whole-graph propagation), the circuit breaker trips after
+    ``blow_limit`` blown closures, and no DFS-interval certificate is ever
+    computed (unknown ranks simply ride in optimistic chunks — the engine's
+    certification pass, not the scheduler, is the safety net).  Where
+    propagation did complete, its conflict pairs carve exact waves for
+    free; runs shorter than ``spec_below`` are merged into optimistic
+    chunks and annotated with the intra-wave reach pairs already computed.
+    """
+    order = np.asarray(order, dtype=np.int64)
+    n_total = order.shape[0]
+    if n_total == 0:
+        return SpecSchedule(np.empty(0, np.int64), np.empty(0, bool), [], {})
+    page = -(-max(block, max_wave) // 64) * 64
+    if exact_budget is None:
+        exact_budget = min(
+            max(131072, 16 * page * max(g.m // max(g.n, 1), 1)),
+            max(g.m // 4, 8192),
+        )
+    state = _OnePassState(
+        g, order, page, exact_budget, 2, None,
+        blow_limit=blow_limit, use_intervals=False, keep_raw=True,
+    )
+
+    def _chunk_pairs(s: int, wlen: int):
+        """Wave-local intra-wave pairs of [s, s+wlen), or "unknown"."""
+        if state.unknown[s : s + wlen].any():
+            return "unknown"
+        a_out, b_out = [], []
+        for k in range(s // page, (s + wlen - 1) // page + 1):
+            pr = state.raw.get(k)
+            if pr is None:
+                continue
+            if isinstance(pr, str):  # dense marker: pairs never extracted
+                return "unknown"
+            lo_s, hi_s = pr
+            sel = (lo_s >= s) & (hi_s < s + wlen)
+            if sel.any():
+                a_out.append(lo_s[sel])
+                b_out.append(hi_s[sel])
+        if not a_out:
+            return np.empty((0, 2), dtype=np.int64)
+        return np.stack([np.concatenate(a_out) - s, np.concatenate(b_out) - s], axis=1)
+
+    lengths: list = []
+    optimistic: list = []
+    pairs: list = []
+    pos = 0
+    while pos < n_total:
+        win = min(2 * page - pos % page, n_total - pos)
+        state.ensure_page((pos + win - 1) // page)
+        off = 0
+        while off < win:
+            s = pos + off
+            limit = min(max_wave, win - off)
+            # longest exact wave from s: bounded by the first conflict pair
+            # and the first budget-blown (unknown) rank at or after s
+            b_min = state.min_break(s)
+            unk = state.unknown[s : s + limit]
+            if unk.any():
+                b_min = min(b_min, s + int(np.argmax(unk)))
+            wlen = min(b_min - s, limit)
+            if wlen == limit and limit < min(max_wave, n_total - s):
+                break  # window-truncated, not conflict-ended: re-read
+            if wlen >= min(spec_below, n_total - s):
+                lengths.append(wlen)
+                optimistic.append(False)
+                pairs.append(None)
+            else:  # too short to amortize: speculate a full chunk instead
+                if limit < min(max_wave, n_total - s):
+                    break  # window tail: re-read so the chunk is full-size
+                wlen = limit
+                lengths.append(wlen)
+                optimistic.append(True)
+                pairs.append(_chunk_pairs(s, wlen))
+            off += wlen
+        pos += off
+    opt = np.asarray(optimistic, dtype=bool)
+    lens = np.asarray(lengths, dtype=np.int64)
+    meta = {
+        "n_waves": int(lens.shape[0]),
+        "n_optimistic": int(opt.sum()),
+        "optimistic_frac": float(lens[opt].sum() / max(n_total, 1)),
+        "closures_blown": int(state.blown),
+    }
+    return SpecSchedule(lens, opt, pairs, meta)

@@ -12,13 +12,18 @@ For each vertex v_i:
 Theorem 3: complete.  Theorem 4: non-redundant (no hop can be removed).
 
 Construction is owned by the ``repro.build`` engine: ``impl="wave"`` runs
-the wave-scheduled bit-parallel sweep, ``impl="device"`` the sparse device
-wave engine (ELL frontier expansion + on-device label append),
-``impl="reference"`` the seed scalar sets+deque path — all produce
-byte-identical labels (the engine's differential tests assert this).
-``impl="auto"`` (default) probes the wave schedule and picks: reference on
-small/dense-reachability graphs, the device engine when an accelerator is
-attached, the host wave engine otherwise.  The per-vertex device/sharded
+the wave-scheduled bit-parallel sweep, ``impl="speculative"`` the
+optimistic-chunk path for dense-reachability orders (sweep rank-consecutive
+chunks without proving mutual unreachability, certify prune-order
+violations exactly with word-level masks, correct violated members from
+the chunk's append log), ``impl="device"`` the sparse device wave engine
+(ELL frontier expansion + on-device label append), ``impl="reference"``
+the seed scalar sets+deque path — all produce byte-identical labels (the
+engine's differential tests assert this).  ``impl="auto"`` (default)
+picks: reference below ~4k vertices; speculative when a sampled
+reach-density probe (or a degenerate exact schedule) flags the
+dense-reachability wall; otherwise the device engine when an accelerator
+is attached, else the host wave engine.  The per-vertex device/sharded
 formulation lives in ``distribution_jax.py``; the serve path in
 ``repro.serve``.
 """

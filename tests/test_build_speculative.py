@@ -1,0 +1,261 @@
+"""The speculative construction path: optimistic chunks + certify + correct.
+
+Headline property: ``impl="speculative"`` produces BYTE-IDENTICAL finalized
+labels to the scalar reference builder — on the five DAG families, on the
+dense-reachability paper analogues (citeseerx / cit-Patents) where the exact
+wave scheduler degenerates, and on an adversarial rank-consecutive chain
+that forces a near-100% violation rate.  Plus: auto-dispatch routes dense
+schedules to the speculative engine, the scalar bailout engages on sustained
+worst-case chains, `_LabelStore` rollback restores exact watermarks (deep
+tails and null-refill included), and the certification word primitives /
+device certification mask agree with brute force.
+"""
+import numpy as np
+import pytest
+
+from repro.build import bitset
+from repro.build.engine import _LabelStore, build_distribution_labels
+from repro.core.distribution import distribution_labeling
+from repro.graph.csr import from_edges
+from repro.graph.generators import paper_dataset_analogue
+
+from test_build_engine import _assert_identical, _dag_families
+
+
+def _chain(n: int):
+    """Directed path 0 -> 1 -> ... -> n-1; with order = identity every pair
+    of consecutive ranks truly conflicts, the worst case for speculation."""
+    return from_edges(n, np.arange(n - 1), np.arange(1, n))
+
+
+def _chain_segments(n: int, seg: int):
+    """Disjoint directed paths of length ``seg`` laid out rank-consecutively:
+    identical per-chunk conflict structure to one long chain, but label rows
+    stay O(seg) so the reference build is cheap at thousands of ranks."""
+    src = np.concatenate(
+        [np.arange(s, s + seg - 1) for s in range(0, n, seg)])
+    return from_edges(n, src, src + 1)
+
+
+# ---------------------------------------------------------------------------
+# byte identity
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_byte_identical_all_families(rng):
+    for name, g in _dag_families(rng):
+        ref = build_distribution_labels(g, impl="reference")
+        spec = build_distribution_labels(g, impl="speculative")
+        _assert_identical(ref, spec, name)
+
+
+def test_speculative_byte_identical_under_order_variants(rng):
+    from repro.graph.generators import random_dag
+
+    g = random_dag(120, 360, seed=8)
+    for order_name in ("degree_product", "degree_sum", "random"):
+        ref = build_distribution_labels(g, impl="reference", order_name=order_name)
+        spec = build_distribution_labels(g, impl="speculative", order_name=order_name)
+        _assert_identical(ref, spec, order_name)
+
+
+@pytest.mark.parametrize(
+    "name,scale", [("citeseerx", 0.0008), ("cit-Patents", 0.001)]
+)
+def test_speculative_byte_identical_dense_analogues(name, scale):
+    g = paper_dataset_analogue(name, scale=scale, seed=7)
+    ref = build_distribution_labels(g, impl="reference")
+    spec = build_distribution_labels(g, impl="speculative")
+    _assert_identical(ref, spec, name)
+    st = spec.build_stats["speculation"]
+    assert st["spec_waves"] > 0 and st["spec_members"] > 0
+    assert not st["scalar_bailout"]
+
+
+def test_auto_routes_speculative_on_dense_analogue():
+    g = paper_dataset_analogue("citeseerx", scale=0.0008, seed=7)
+    assert g.n >= 4096  # above the small-graph reference cutoff
+    auto = distribution_labeling(g)
+    assert auto.build_impl == "speculative"
+    assert auto.build_stats["impl"] == "speculative"
+    assert "violation_rate" in auto.build_stats["speculation"]
+    ref = build_distribution_labels(g, impl="reference")
+    _assert_identical(ref, auto, "auto-vs-reference")
+
+
+# ---------------------------------------------------------------------------
+# adversarial rank-consecutive chains
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_chain_near_total_violation():
+    n = 128
+    g = _chain(n)
+    order = np.arange(n)
+    ref = build_distribution_labels(g, order=order, impl="reference")
+    spec = build_distribution_labels(g, order=order, impl="speculative")
+    _assert_identical(ref, spec, "chain")
+    st = spec.build_stats["speculation"]
+    # every member except each chunk's lowest rank runs on stale prune sets
+    assert st["violations"] == st["spec_members"] - st["spec_waves"]
+    assert st["violation_rate"] >= 0.9
+    assert st["replayed_members"] == st["violations"]
+    assert not st["scalar_bailout"]  # too short to give up on
+
+
+def test_adversarial_chain_scalar_bailout():
+    # 9 optimistic schedule pages of 256 ranks: the bailout check at the
+    # ninth sees >= 2048 speculated members with the cap ground down to its
+    # floor and ~0.88 of members replayed -> the rest run the scalar loop
+    n, seg = 2304, 32
+    g = _chain_segments(n, seg)
+    order = np.arange(n)
+    ref = build_distribution_labels(g, order=order, impl="reference")
+    spec = build_distribution_labels(g, order=order, impl="speculative")
+    _assert_identical(ref, spec, "chain-segments")
+    st = spec.build_stats["speculation"]
+    assert st["scalar_bailout"]
+    assert st["violation_rate"] >= 0.8
+    assert st["spec_members"] < n  # the tail ranks never speculated
+
+
+# ---------------------------------------------------------------------------
+# _LabelStore rollback watermarks
+# ---------------------------------------------------------------------------
+
+
+def test_labelstore_rollback_restores_watermark():
+    store = _LabelStore(4, deep_cap=8, null=9)
+    v = np.array([0, 2], dtype=np.int64)
+    store.append(v, np.array([3, 2]), np.array([1, 2, 3, 4, 5], dtype=np.int32))
+    before = [store.row(u).copy() for u in range(4)]
+    marks = store.lens[v].copy()
+    store.append(v, np.array([2, 4]), np.arange(10, 16, dtype=np.int32))
+    store.rollback(v, marks)
+    for u in range(4):
+        assert np.array_equal(store.row(u), before[u]), u
+    # null-refill invariant: every head slot past the row length holds the
+    # null sentinel again (the rectangular prune gather relies on it)
+    for u in range(4):
+        assert (store.mat[u, store.lens[u]:] == 9).all(), u
+
+
+def test_labelstore_rollback_across_deep_boundary():
+    store = _LabelStore(2, deep_cap=4, null=7)
+    v = np.array([0], dtype=np.int64)
+    store.append(v, np.array([3]), np.arange(3, dtype=np.int32))
+    mark = store.lens[v].copy()
+    # push the row through the dense head into the deep tail, then undo
+    store.append(v, np.array([6]), np.arange(10, 16, dtype=np.int32))
+    assert store.lens[0] == 9 and 0 in store.deep
+    store.rollback(v, mark)
+    assert np.array_equal(store.row(0), np.arange(3, dtype=np.int32))
+    assert 0 not in store.deep
+    assert (store.mat[0, 3:] == 7).all()
+    # partial rollback that still ends inside the deep tail
+    store.append(v, np.array([6]), np.arange(20, 26, dtype=np.int32))
+    store.rollback(v, np.array([6], dtype=np.int32))
+    assert np.array_equal(
+        store.row(0), np.array([0, 1, 2, 20, 21, 22], dtype=np.int32))
+    assert len(store.deep[0]) == 2
+
+
+def test_labelstore_rollback_to_empty():
+    store = _LabelStore(3, deep_cap=8, null=5)
+    v = np.array([1], dtype=np.int64)
+    store.append(v, np.array([4]), np.arange(4, dtype=np.int32))
+    store.rollback(v, np.zeros(1, dtype=np.int32))
+    assert store.lens[1] == 0
+    assert store.row(1).size == 0
+    assert (store.mat[1] == 5).all()
+
+
+# ---------------------------------------------------------------------------
+# certification word primitives
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_bits_triangular():
+    w = 70  # crosses a word boundary
+    pref = bitset.prefix_bits(w)
+    mb = bitset.member_bits(w)
+    for j in range(w):
+        for i in range(w):
+            have = bool((pref[j] & mb[i]).any())
+            assert have == (i < j), (i, j)
+
+
+def test_touch_matrix_brute_force(rng):
+    w, rows = 11, 40
+    vb = rng.integers(0, 2, (rows, w)).astype(bool)
+    ab = rng.integers(0, 2, (rows, w)).astype(bool)
+    mb = bitset.member_bits(w)
+    v_words = np.zeros((rows, mb.shape[1]), dtype=np.uint64)
+    a_words = np.zeros((rows, mb.shape[1]), dtype=np.uint64)
+    for r in range(rows):
+        for j in range(w):
+            if vb[r, j]:
+                v_words[r] |= mb[j]
+            if ab[r, j]:
+                a_words[r] |= mb[j]
+    t = bitset.touch_matrix(v_words, a_words, w)
+    for j in range(w):
+        exp = np.zeros(mb.shape[1], dtype=np.uint64)
+        for r in range(rows):
+            if vb[r, j]:
+                exp |= a_words[r]
+        assert np.array_equal(t[j], exp), j
+
+
+def test_violation_mask_sides_consistent(rng):
+    w = 9
+    mb = bitset.member_bits(w)
+
+    def rand_words(rows):
+        out = np.zeros((rows, mb.shape[1]), dtype=np.uint64)
+        for r in range(rows):
+            for j in range(w):
+                if rng.integers(0, 2):
+                    out[r] |= mb[j]
+        return out
+
+    own_rev, own_fwd = rand_words(w), rand_words(w)
+    t_rev, t_fwd = rand_words(w), rand_words(w)
+    both = bitset.violation_mask(own_rev, own_fwd, t_rev, t_fwd)
+    vr, vf = bitset.violation_mask(own_rev, own_fwd, t_rev, t_fwd, sides=True)
+    assert np.array_equal(both, vr | vf)
+    pref = bitset.prefix_bits(w)
+    exp_r = ((own_fwd & pref) & t_rev).any(axis=1)
+    exp_f = ((own_rev & pref) & t_fwd).any(axis=1)
+    assert np.array_equal(vr, exp_r)
+    assert np.array_equal(vf, exp_f)
+
+
+def test_device_certification_mask_matches_brute_force(rng):
+    jax = pytest.importorskip("jax")
+    from repro.build.engine_jax import certification_mask
+
+    n, w = 14, 6
+    lab_rev = rng.integers(0, 2, (n, w)).astype(bool)
+    vis_rev = lab_rev | rng.integers(0, 2, (n, w)).astype(bool)
+    lab_fwd = rng.integers(0, 2, (n, w)).astype(bool)
+    vis_fwd = lab_fwd | rng.integers(0, 2, (n, w)).astype(bool)
+    members = rng.permutation(n)[:w].astype(np.int64)
+
+    got = np.asarray(
+        certification_mask(
+            *(bitset.pack_bool_rows_u32(m)
+              for m in (lab_rev, vis_rev, lab_fwd, vis_fwd)),
+            members, w,
+        )
+    )
+    exp = np.zeros(w, dtype=bool)
+    for j in range(w):
+        for i in range(j):
+            rev_hit = lab_fwd[members[j], i] and any(
+                vis_rev[r, j] and lab_rev[r, i] for r in range(n))
+            fwd_hit = lab_rev[members[j], i] and any(
+                vis_fwd[r, j] and lab_fwd[r, i] for r in range(n))
+            if rev_hit or fwd_hit:
+                exp[j] = True
+    assert np.array_equal(got, exp)
