@@ -137,6 +137,27 @@ def load_trajectory(paths=MONOTONE_TRAJECTORY_FILES) -> dict:
     return committed
 
 
+_MISSING = object()
+
+
+def _field(row: dict, path: str, key: str, origin: str, out) -> object:
+    """Guarded dotted-path lookup for BENCH rows.
+
+    Committed trajectory rows can predate schema changes (older sessions
+    wrote fewer fields); a raw ``row["engine"]["impl"]`` KeyError would
+    abort the whole monotone gate on the first drifted row.  Returns
+    ``_MISSING`` after naming the field AND which row (committed vs fresh)
+    lacks it, so the caller skips just that check with a warning."""
+    cur = row
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            out(f"# WARNING: {origin} row '{key}' has no field '{path}' "
+                f"(schema drift) — skipping checks that need it")
+            return _MISSING
+        cur = cur[part]
+    return cur
+
+
 def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
                    ratio_tol: float = 0.25,
                    serve_path: str = "BENCH_serve.json",
@@ -178,28 +199,35 @@ def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
     fresh = fresh_all.get("datasets", {})
     compared = 0
     for key, new in fresh.items():
+        n_impl = _field(new, "engine.impl", key, "fresh", out)
+        n_speed = _field(new, "speedup", key, "fresh", out)
         # absolute dense-wall floor: no committed baseline required
-        if (new["engine"]["impl"] == "speculative" and new.get("reps", 1) >= 2
-                and new["speedup"] < 1.0):
+        if (n_impl == "speculative" and new.get("reps", 1) >= 2
+                and n_speed is not _MISSING and n_speed < 1.0):
             regressions.append(
                 f"{key}: speculative engine fell below the reference builder "
-                f"({new['speedup']:.2f}x < 1.0) — dense-reachability wall reopened")
+                f"({n_speed:.2f}x < 1.0) — dense-reachability wall reopened")
         if not new.get("labels_match_reference", False):
             regressions.append(f"{key}: engine labels no longer byte-identical")
         old = trajectory.get(key)
         if old is None:
             continue
         compared += 1
-        ni, oi = new["engine"]["label_ints"], old["engine"]["label_ints"]
-        if ni > oi * (1 + tol):
+        ni = _field(new, "engine.label_ints", key, "fresh", out)
+        oi = _field(old, "engine.label_ints", key, "committed", out)
+        if ni is not _MISSING and oi is not _MISSING and ni > oi * (1 + tol):
             regressions.append(
                 f"{key}: index size regressed {oi} -> {ni} ints (> {tol:.0%})")
         batched = ("wave", "device", "speculative")
+        o_impl = _field(old, "engine.impl", key, "committed", out)
+        o_speed = _field(old, "speedup", key, "committed", out)
         if (new.get("reps", 1) >= 2 and old.get("reps", 1) >= 2
-                and new["engine"]["impl"] in batched
-                and old["engine"]["impl"] in batched):
-            ns, os_ = new["speedup"], old["speedup"]
-            if ns < os_ * (1 - ratio_tol):
+                and n_impl in batched and o_impl in batched):
+            if _MISSING in (n_speed, o_speed):
+                ns = os_ = None
+            else:
+                ns, os_ = n_speed, o_speed
+            if ns is not None and ns < os_ * (1 - ratio_tol):
                 regressions.append(
                     f"{key}: engine speedup regressed {os_:.2f}x -> {ns:.2f}x "
                     f"(> {ratio_tol:.0%} drop)")

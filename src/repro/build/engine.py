@@ -73,12 +73,18 @@ members, replay seconds) when the speculative engine ran.
 """
 from __future__ import annotations
 
+import os
+import re
+import shutil
 import time
+import warnings
+import zlib
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.build import bitset
+from repro.ft import inject
 # cone_resume_sweep is the engine's cone-scoped construction entry point
 # (repro.dynamic repairs labels through it); it lives in traverse.py beside
 # the sibling scalar sweep it generalizes
@@ -136,9 +142,19 @@ def build_distribution_labels(
     impl: str = "auto",
     max_wave: int = 256,
     scheduler: str = "onepass",
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 16,
+    resume_dir: Optional[str] = None,
     **device_kwargs,
 ) -> ReachabilityOracle:
     """Build the DL oracle for DAG ``g`` with the selected implementation.
+
+    ``checkpoint_dir`` enables wave/chunk-granular construction checkpoints
+    (every ``checkpoint_every`` schedule boundaries); ``resume_dir``
+    (defaulting to ``checkpoint_dir``) is scanned for the latest complete
+    checkpoint of the SAME build, which resumes mid-schedule and finishes
+    byte-identical to an uninterrupted run.  Host batched impls only
+    ("wave"/"speculative" — a resumed build adopts its checkpoint's impl).
 
     ``device_kwargs`` (``expand=``, ``l_max=``, ``ell_width=``, ``mesh=``,
     ...) forward to the device engine and are rejected for the host impls —
@@ -154,6 +170,20 @@ def build_distribution_labels(
     waves = None
     spec_schedule = None
     t_sched = 0.0
+    fingerprint = None
+    restored = None
+    if checkpoint_dir is not None or resume_dir is not None:
+        fingerprint = _build_fingerprint(g, order, max_wave, scheduler)
+    rdir = resume_dir if resume_dir is not None else checkpoint_dir
+    if rdir is not None:
+        restored = _BuildCheckpointer.latest(rdir, fingerprint)
+    if restored is not None:
+        ck_impl = restored[1]["impl"]
+        if impl not in ("auto", ck_impl):
+            warnings.warn(
+                f"resuming from a {ck_impl!r} checkpoint; requested "
+                f"impl={impl!r} ignored", stacklevel=2)
+        impl = ck_impl
     if impl == "auto":
         if g.n < _AUTO_WAVE_MIN:
             impl = "reference"
@@ -185,8 +215,6 @@ def build_distribution_labels(
     if device_kwargs and impl not in ("device",):
         # auto resolved to a host impl: device tuning knobs will not apply
         # on THIS host — say so instead of silently no-opping
-        import warnings
-
         warnings.warn(
             f"device kwargs {sorted(device_kwargs)} ignored: impl resolved "
             f"to {impl!r} on this host", stacklevel=2)
@@ -198,18 +226,29 @@ def build_distribution_labels(
         t0 = time.perf_counter()
         spec_schedule = speculative_schedule(g, order, max_wave=max_wave)
         t_sched += time.perf_counter() - t0
+    ckpt = None
+    if checkpoint_dir is not None:
+        if impl in ("wave", "bitset", "speculative"):
+            ckpt = _BuildCheckpointer(checkpoint_dir, every=checkpoint_every)
+        else:
+            warnings.warn(
+                f"construction checkpointing is host-batched only; "
+                f"impl={impl!r} builds without checkpoints", stacklevel=2)
     spec_stats: dict = {}
     t0 = time.perf_counter()
     if impl in ("reference", "ref"):
         oracle = _build_reference(g, order)
         impl = "reference"
     elif impl in ("wave", "bitset"):
-        oracle = _build_wave(g, order, max_wave=max_wave, waves=waves)
+        oracle = _build_wave(g, order, max_wave=max_wave, waves=waves,
+                             ckpt=ckpt, fingerprint=fingerprint,
+                             restored=restored)
         impl = "wave"
     elif impl == "speculative":
         oracle = _build_speculative(
             g, order, max_wave=max_wave, schedule=spec_schedule,
-            stats_out=spec_stats,
+            stats_out=spec_stats, ckpt=ckpt, fingerprint=fingerprint,
+            restored=restored,
         )
     elif impl == "device":
         from repro.build.engine_jax import distribution_labeling_device
@@ -237,6 +276,11 @@ def build_distribution_labels(
     }
     if spec_stats:
         stats["speculation"] = spec_stats
+    if ckpt is not None or restored is not None:
+        stats["checkpoint"] = {
+            "resumed_from": None if restored is None else int(restored[1]["done"]),
+            "written": 0 if ckpt is None else ckpt.written,
+        }
     object.__setattr__(oracle, "build_stats", stats)
     return oracle
 
@@ -406,6 +450,41 @@ class _LabelStore:
                 else:
                     del self.deep[v]
 
+    # -- checkpoint serialization ---------------------------------------
+
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        """Exact store state as named arrays (the checkpoint payload).
+
+        The head matrix is saved at its CURRENT width: capacity growth is a
+        deterministic function of the append sequence, so restoring the
+        exact width keeps a resumed build on the identical growth path."""
+        from repro.persist.blocks import pack_ragged
+
+        keys = np.fromiter(self.deep.keys(), dtype=np.int64, count=len(self.deep))
+        vals, offs = pack_ragged([self.deep[int(k)] for k in keys])
+        return {
+            "store_mat": self.mat,
+            "store_lens": self.lens,
+            "store_deep_keys": keys,
+            "store_deep_vals": vals,
+            "store_deep_offs": offs,
+        }
+
+    @classmethod
+    def from_arrays(cls, arrays: Dict[str, np.ndarray], meta: dict) -> "_LabelStore":
+        """Rebuild a store from ``to_arrays`` output + the builder meta
+        (``store_n`` / ``store_deep_cap`` / ``store_null``)."""
+        from repro.persist.blocks import unpack_ragged
+
+        self = cls(int(meta["store_n"]), deep_cap=int(meta["store_deep_cap"]),
+                   null=meta["store_null"])
+        self.mat = np.ascontiguousarray(arrays["store_mat"], dtype=np.int32)
+        self.lens = np.ascontiguousarray(arrays["store_lens"], dtype=np.int32)
+        keys = arrays["store_deep_keys"]
+        tails = unpack_ragged(arrays["store_deep_vals"], arrays["store_deep_offs"])
+        self.deep = {int(k): list(t) for k, t in zip(keys, tails)}
+        return self
+
     # -- reads ----------------------------------------------------------
 
     def row(self, v: int) -> np.ndarray:
@@ -554,6 +633,92 @@ class _LabelStore:
         return out
 
 
+# ---------------------------------------------------------------------------
+# wave-granular build checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _build_fingerprint(g: CSRGraph, order: np.ndarray, max_wave: int,
+                       scheduler: str) -> str:
+    """Identity of one build problem: a checkpoint resumes only a build of
+    the SAME graph, rank order, and schedule parameters (schedules are
+    deterministic in these, so the resumed run recomputes an identical
+    schedule instead of persisting it)."""
+    h = zlib.crc32(np.ascontiguousarray(g.indptr).tobytes())
+    h = zlib.crc32(np.ascontiguousarray(g.indices).tobytes(), h)
+    h = zlib.crc32(np.ascontiguousarray(order, dtype=np.int64).tobytes(), h)
+    return f"{g.n}:{int(g.indices.shape[0])}:{max_wave}:{scheduler}:{h & 0xFFFFFFFF:08x}"
+
+
+_CKPT_RE = re.compile(r"^ckpt_(\d{8})$")
+
+
+class _BuildCheckpointer:
+    """Wave/chunk-granular construction checkpoints.
+
+    Each completed schedule boundary (exact wave, speculative chunk, or
+    scalar-bailout chunk) bumps a monotone ``done`` counter; every
+    ``every``-th boundary snapshots the exact ``_LabelStore`` state plus the
+    cursor + adaptive-speculation state through ``persist.save_blocks``
+    (checksummed, write-temp-then-rename — a crash mid-save leaves the
+    previous checkpoint intact).  All scratch arrays are provably zero at
+    boundaries, so store + cursor IS the complete builder state and a
+    resumed build is byte-identical to an uninterrupted one."""
+
+    def __init__(self, path: str, every: int = 16, keep: int = 2):
+        self.path = path
+        self.every = max(int(every), 1)
+        self.keep = max(int(keep), 1)
+        self.written = 0
+
+    def maybe_save(self, done: int, store: _LabelStore, meta: dict) -> None:
+        if done % self.every:
+            return
+        from repro.persist.blocks import save_blocks
+
+        meta = dict(meta, done=int(done),
+                    store_n=store.n, store_deep_cap=store.DEEP_CAP,
+                    store_null=store.null)
+        os.makedirs(self.path, exist_ok=True)
+        save_blocks(os.path.join(self.path, f"ckpt_{done:08d}"),
+                    store.to_arrays(), meta)
+        self.written += 1
+        self._gc()
+
+    def _gc(self) -> None:
+        names = sorted(d for d in os.listdir(self.path) if _CKPT_RE.match(d))
+        for stale in names[: -self.keep]:
+            shutil.rmtree(os.path.join(self.path, stale), ignore_errors=True)
+
+    @staticmethod
+    def latest(path: str, fingerprint: str):
+        """Newest complete checkpoint matching ``fingerprint``, as
+        ``(arrays, meta)`` — or None.  A corrupt or foreign checkpoint is
+        skipped (with a warning) in favor of the next older one; a crash
+        mid-save leaves only a ``.tmp`` which is never scanned."""
+        from repro.persist.blocks import CorruptSnapshotError, load_blocks
+
+        if not os.path.isdir(path):
+            return None
+        for name in sorted(
+                (d for d in os.listdir(path) if _CKPT_RE.match(d)), reverse=True):
+            cpath = os.path.join(path, name)
+            try:
+                arrays, meta, _ = load_blocks(cpath, strict=True)
+            except CorruptSnapshotError as e:
+                warnings.warn(f"skipping unusable checkpoint {cpath}: {e}",
+                              stacklevel=2)
+                continue
+            if meta.get("fingerprint") != fingerprint:
+                warnings.warn(
+                    f"skipping checkpoint {cpath}: fingerprint "
+                    f"{meta.get('fingerprint')!r} does not match this build "
+                    f"({fingerprint!r})", stacklevel=2)
+                continue
+            return arrays, meta
+        return None
+
+
 def _wave_sweep(
     members_c: np.ndarray,    # int64[2W] role-split ids: rev members + fwd (+n)
     ranks_c: np.ndarray,      # int32[2W] their global ranks (duplicated)
@@ -648,6 +813,9 @@ def _build_wave(
     order: np.ndarray,
     max_wave: int = 256,
     waves: Optional[np.ndarray] = None,
+    ckpt: Optional[_BuildCheckpointer] = None,
+    fingerprint: Optional[str] = None,
+    restored=None,
 ) -> ReachabilityOracle:
     n = g.n
     if n == 0:
@@ -677,9 +845,16 @@ def _build_wave(
     hop_mask = np.zeros((n + 1, k_words), dtype=np.uint64)
     visited = np.zeros((2 * n, k_words), dtype=np.uint64)
 
-    base = 0
-    for wlen in waves:
-        wlen = int(wlen)
+    start_wave, done = 0, 0
+    if restored is not None:
+        arrays, meta = restored
+        store = _LabelStore.from_arrays(arrays, meta)
+        start_wave = int(meta["wave_idx"])
+        done = int(meta["done"])
+    base = int(np.asarray(waves[:start_wave], dtype=np.int64).sum())
+    for wi in range(start_wave, int(waves.shape[0])):
+        wlen = int(waves[wi])
+        inject.fire("build.wave", index=wi)
         members = order[base : base + wlen]
         ranks = ranks_of[base : base + wlen]
         members_c = np.concatenate([members, members + n])
@@ -694,6 +869,13 @@ def _build_wave(
             store, indptr_c, indices_c, hop_mask[:, :kwe], visited[:, :kwe],
         )
         base += wlen
+        done += 1
+        if ckpt is not None:
+            # all sweep scratch is zero again here: store + cursor is the
+            # complete builder state
+            ckpt.maybe_save(done, store, {
+                "impl": "wave", "fingerprint": fingerprint, "wave_idx": wi + 1,
+            })
 
     return ReachabilityOracle(
         L_out=store.finalize(0, n),
@@ -1028,6 +1210,10 @@ def _correct_chunk(
     rows_a = v_rep[sel]
     u2, c2 = np.unique(rows_a, return_counts=True)  # u2 == af_rows
     store.rollback(u2, (store.lens[u2] - c2).astype(np.int32))
+    # chaos hook: a crash between the watermark rollback and the surviving
+    # re-append is the worst case for checkpoint resume — the store has
+    # LOST the chunk's appends; resume must replay from the last boundary
+    inject.fire("build.spec_replay", rows=int(u2.shape[0]))
     ksel = keep[sel]
     kv_rows, kv_vals = rows_a[ksel], vals_cat[sel][ksel]
     if kv_rows.size:
@@ -1092,6 +1278,9 @@ def _build_speculative(
     max_wave: int = 256,
     schedule=None,
     stats_out: Optional[dict] = None,
+    ckpt: Optional[_BuildCheckpointer] = None,
+    fingerprint: Optional[str] = None,
+    restored=None,
 ) -> ReachabilityOracle:
     """Speculative wave construction: optimistic chunks + certify + bounded
     rollback-replay.  Byte-identical to the scalar reference builder."""
@@ -1139,6 +1328,20 @@ def _build_speculative(
     }
     cap = spec_cap  # adaptive optimism: current speculative chunk size
     clean_streak = 0
+    start_wave, start_off, done = 0, 0, 0
+    if restored is not None:
+        arrays, meta = restored
+        store = _LabelStore.from_arrays(arrays, meta)
+        start_wave = int(meta["wave_idx"])
+        start_off = int(meta["off"])
+        done = int(meta["done"])
+        # the adaptive state decides every later chunk boundary — restoring
+        # it keeps the resumed chunk sequence identical to an uninterrupted
+        # run (byte-identity needs only store state, but stats/cadence
+        # should not fork either)
+        cap = int(meta["cap"])
+        clean_streak = int(meta["clean_streak"])
+        st.update(meta["st"])
 
     def _spec_chunk(base: int, w: int) -> None:
         nonlocal cap, clean_streak
@@ -1189,12 +1392,27 @@ def _build_speculative(
             if rate > 0.25:
                 cap = max(cap // 2, 8)
 
-    base = 0
-    for wlen, opt, pr in zip(schedule.lengths, schedule.optimistic, schedule.pairs):
-        wlen = int(wlen)
+    def _save(wi: int, off: int, wlen: int) -> None:
+        # normalize the cursor so a resume never lands past a wave's end
+        if off >= wlen:
+            wi, off = wi + 1, 0
+        ckpt.maybe_save(done, store, {
+            "impl": "speculative", "fingerprint": fingerprint,
+            "wave_idx": wi, "off": off,
+            "cap": cap, "clean_streak": clean_streak, "st": dict(st),
+        })
+
+    base = int(np.asarray(schedule.lengths[:start_wave], dtype=np.int64).sum())
+    n_sched = int(schedule.lengths.shape[0])
+    for wi in range(start_wave, n_sched):
+        wlen = int(schedule.lengths[wi])
+        opt = bool(schedule.optimistic[wi])
+        pr = schedule.pairs[wi]
+        off = start_off if wi == start_wave else 0
         if not opt:
             # proven conflict-free: the exact fused sweep, no certification,
             # run at the wave's own word width
+            inject.fire("build.wave", index=wi)
             members = order[base : base + wlen]
             ranks = ranks_of[base : base + wlen]
             members_c = np.concatenate([members, members + n])
@@ -1206,36 +1424,46 @@ def _build_speculative(
                 hop_mask[:, :kwe], visited[:, :kwe],
             )
             st["exact_waves"] += 1
+            done += 1
+            if ckpt is not None:
+                _save(wi, wlen, wlen)
         else:
-            if isinstance(pr, np.ndarray):
+            if off == 0 and isinstance(pr, np.ndarray):
+                # a resumed wave (off > 0) already counted its pairs before
+                # the checkpoint was taken
                 st["annotated_pairs"] += int(pr.shape[0])
-            # the chunk's lowest-ranked member can never be violated, so the
-            # replay fraction is capped at (w - 1) / w = 0.875 at the minimum
-            # cap of 8 — 0.85 sits just under that ceiling (reachable by a
-            # true adversarial chain) and far above healthy workloads
-            if not st["scalar_bailout"] and (
-                st["spec_members"] >= 2048 and cap <= 8
-                and st["replayed_members"] > 0.85 * st["spec_members"]
-            ):
-                st["scalar_bailout"] = True
-            if st["scalar_bailout"]:
-                # worst case (adversarial chains): speculation keeps losing
-                # even at the minimum cap — degrade to the sequential scalar
-                # loop for the remaining optimistic ranks, bounding total
-                # work at ~reference cost
-                for j in range(wlen):
-                    v_j = int(order[base + j])
-                    rank_j = base + j
-                    _scalar_replay(indptr_c, indices_c, v_j, n + v_j, rank_j,
-                                   store, prune_mark)
-                    _scalar_replay(indptr_c, indices_c, n + v_j, v_j, rank_j,
-                                   store, prune_mark)
-            else:
-                off = 0
-                while off < wlen:
-                    c = min(cap, wlen - off)
+            while off < wlen:
+                c = min(cap, wlen - off)
+                inject.fire("build.chunk", index=done, wave=wi, off=off)
+                # the chunk's lowest-ranked member can never be violated, so
+                # the replay fraction is capped at (w - 1) / w = 0.875 at the
+                # minimum cap of 8 — 0.85 sits just under that ceiling
+                # (reachable by a true adversarial chain) and far above
+                # healthy workloads
+                if not st["scalar_bailout"] and (
+                    st["spec_members"] >= 2048 and cap <= 8
+                    and st["replayed_members"] > 0.85 * st["spec_members"]
+                ):
+                    st["scalar_bailout"] = True
+                if st["scalar_bailout"]:
+                    # worst case (adversarial chains): speculation keeps
+                    # losing even at the minimum cap — degrade to the
+                    # sequential scalar loop for the remaining optimistic
+                    # ranks (chunk-wise, so the checkpoint cursor still
+                    # covers it), bounding total work at ~reference cost
+                    for j in range(off, off + c):
+                        v_j = int(order[base + j])
+                        rank_j = base + j
+                        _scalar_replay(indptr_c, indices_c, v_j, n + v_j,
+                                       rank_j, store, prune_mark)
+                        _scalar_replay(indptr_c, indices_c, n + v_j, v_j,
+                                       rank_j, store, prune_mark)
+                else:
                     _spec_chunk(base + off, c)
-                    off += c
+                off += c
+                done += 1
+                if ckpt is not None:
+                    _save(wi, off, wlen)
         base += wlen
 
     if stats_out is not None:

@@ -79,6 +79,9 @@ def build_oracle(
         level=topo_levels(dag),
         mesh=mesh,
         bucketing=bucketing,
+        # degradation ladder bottom rung: the condensation DAG the labels
+        # index, so corrupted/missing rows degrade to exact online search
+        fallback_graph=dag,
     )
     co = CondensedOracle(oracle=oracle, comp=comp, engine=engine)
     # queries reach the engine in original ids; the engine reads the comp

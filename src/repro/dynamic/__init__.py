@@ -8,8 +8,8 @@
 
 Layers: ``delta`` (edge log + SCC-condensation maintenance), ``repair``
 (resumed pruned-BFS label repair), ``versioned`` (epoch snapshots, COW
-publish, staleness budget), ``workload`` (interleaved trace generation and
-replay).
+publish, staleness budget), ``durable`` (WAL + snapshot crash recovery),
+``workload`` (interleaved trace generation and replay).
 """
 from repro.dynamic.delta import (
     CondensationState,
@@ -17,6 +17,7 @@ from repro.dynamic.delta import (
     EdgeUpdate,
     UpdateBatch,
 )
+from repro.dynamic.durable import DurableDynamicOracle
 from repro.dynamic.repair import MutableLabels, repair_delete, repair_insert
 from repro.dynamic.versioned import ApplyStats, DynamicOracle, LabelEpoch
 from repro.dynamic.workload import ReplayStats, TraceOp, generate_trace, replay
@@ -25,6 +26,7 @@ __all__ = [
     "ApplyStats",
     "CondensationState",
     "DeltaEvent",
+    "DurableDynamicOracle",
     "DynamicOracle",
     "EdgeUpdate",
     "LabelEpoch",

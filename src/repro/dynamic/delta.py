@@ -135,6 +135,65 @@ class CondensationState:
         return from_edges(self.n_comp, np.asarray(src, dtype=np.int64),
                           np.asarray(dst, dtype=np.int64))
 
+    # ------------------------------------------------------- serialization
+
+    def to_arrays(self) -> Tuple[Dict[str, np.ndarray], dict]:
+        """Exact state as (named arrays, meta) for ``repro.persist``.
+
+        Only the irreducible state is saved: the original edge list, the
+        comp map, the members lists (in live order — future split id
+        assignments depend on it), and the DAG edge multiplicities.
+        ``in_adj``, ``dag_out``/``dag_in`` and ``dead`` are derived on load
+        (dead ids are exactly the memberless ones)."""
+        from repro.persist.blocks import pack_ragged
+
+        src = np.fromiter(
+            (u for u in range(self.n_orig) for _ in self.out_adj[u]),
+            dtype=np.int64)
+        dst = np.fromiter(
+            (w for u in range(self.n_orig) for w in sorted(self.out_adj[u])),
+            dtype=np.int64)
+        mem_vals, mem_offs = pack_ragged(self.members, dtype=np.int64)
+        if self.edge_mult:
+            em = np.asarray(
+                [(a, b, c) for (a, b), c in sorted(self.edge_mult.items())],
+                dtype=np.int64)
+        else:
+            em = np.empty((0, 3), dtype=np.int64)
+        arrays = {
+            "edges_src": src, "edges_dst": dst,
+            "comp": self.comp, "members_vals": mem_vals,
+            "members_offs": mem_offs, "edge_mult": em,
+        }
+        return arrays, {"n_orig": self.n_orig, "n_comp": self.n_comp}
+
+    @classmethod
+    def from_arrays(cls, arrays: Dict[str, np.ndarray], meta: dict) -> "CondensationState":
+        """Rebuild the exact state saved by ``to_arrays`` — no Tarjan run
+        (a fresh SCC pass could assign different comp ids than the
+        incrementally maintained ones the saved labels are written in)."""
+        self = object.__new__(cls)
+        self.n_orig = int(meta["n_orig"])
+        self.out_adj = [set() for _ in range(self.n_orig)]
+        self.in_adj = [set() for _ in range(self.n_orig)]
+        for u, w in zip(arrays["edges_src"], arrays["edges_dst"]):
+            self.out_adj[int(u)].add(int(w))
+            self.in_adj[int(w)].add(int(u))
+        self.comp = np.asarray(arrays["comp"], dtype=np.int32).copy()
+        self.n_comp = int(meta["n_comp"])
+        from repro.persist.blocks import unpack_ragged
+
+        self.members = unpack_ragged(arrays["members_vals"], arrays["members_offs"])
+        self.dead = {c for c in range(self.n_comp) if not self.members[c]}
+        self.edge_mult = {
+            (int(a), int(b)): int(c) for a, b, c in arrays["edge_mult"]}
+        self.dag_out = [set() for _ in range(self.n_comp)]
+        self.dag_in = [set() for _ in range(self.n_comp)]
+        for (a, b) in self.edge_mult:
+            self.dag_out[a].add(b)
+            self.dag_in[b].add(a)
+        return self
+
     def _dag_reaches(self, a: int, b: int) -> bool:
         """BFS a ->* b over the condensation (scoped cycle probe)."""
         if a == b:

@@ -164,12 +164,22 @@ class MutableLabels:
         self._mark_appends, self._mark_drops = self.appends, self.drops
         return a, d
 
-    def take_dirty(self) -> tuple[Dict[int, List[int]], Dict[int, List[int]]]:
-        """Dirty rows since the last publish (and reset the dirty sets)."""
+    def peek_dirty(self) -> tuple[Dict[int, List[int]], Dict[int, List[int]]]:
+        """Dirty rows since the last publish, WITHOUT consuming them — the
+        transactional publish stages from this and calls ``clear_dirty``
+        only at its commit point, so a failed publish stays retryable."""
         out = {v: list(self.out_rows[v]) for v in self.dirty_out}
         inn = {v: list(self.in_rows[v]) for v in self.dirty_in}
+        return out, inn
+
+    def clear_dirty(self) -> None:
         self.dirty_out = set()
         self.dirty_in = set()
+
+    def take_dirty(self) -> tuple[Dict[int, List[int]], Dict[int, List[int]]]:
+        """Dirty rows since the last publish (and reset the dirty sets)."""
+        out, inn = self.peek_dirty()
+        self.clear_dirty()
         return out, inn
 
 

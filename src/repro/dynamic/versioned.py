@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.build.engine import build_distribution_labels
 from repro.core.oracle import ReachabilityOracle
+from repro.ft import inject
 from repro.dynamic import delta as delta_mod
 from repro.dynamic.delta import CondensationState, UpdateBatch
 from repro.dynamic.repair import MutableLabels, repair_delete, repair_insert
@@ -154,6 +155,10 @@ class DynamicOracle:
             self._snapshot_oracle(), backend=backend, mesh=mesh,
             bucketing=bucketing, level=self.level,
             comp_source=self._current_comp, epoch=0,
+            # frozen materialization of the initial condensation DAG: the
+            # degradation ladder's search rung must answer against the
+            # SERVED epoch's graph, never the live mutating delta
+            fallback_graph=self.delta.dag_csr(),
         )
         self._install_epoch(self._snapshot_oracle())
 
@@ -264,18 +269,56 @@ class DynamicOracle:
         return stats
 
     def publish(self) -> int:
-        """Publish the working state as a new immutable epoch."""
+        """Publish the working state as a new immutable epoch.
+
+        TRANSACTIONAL: every expensive step (compacting rebuild, COW row
+        merge, frozen-DAG materialization) is staged into locals first; live
+        state — epoch counter, pinned snapshots, the serving engine, the
+        dirty-row sets — mutates only at the commit point below.  A failure
+        mid-publish (crash, injected fault, rebuild OOM) leaves the previous
+        epoch serving and the working state intact, so the publish can
+        simply be retried."""
         rebuilt = self._rebuild_pending
+        # ---- stage ----------------------------------------------------
+        staged_rebuild = None
+        if rebuilt:
+            dag = self.delta.dag_csr()
+            base = build_distribution_labels(dag, impl=self.build_impl)
+            staged_rebuild = {
+                "hop_rank": base.hop_rank,
+                "inv_rank": np.argsort(base.hop_rank).astype(np.int32),
+                "labels": MutableLabels.from_oracle(base),
+                "level": topo_levels(dag),
+            }
+            oracle = base
+        else:
+            out_rows, in_rows = self.labels.peek_dirty()
+            oracle = (self._base_oracle.with_updated_rows(out_rows, in_rows)
+                      if (out_rows or in_rows) else self._base_oracle)
+        fallback = self.delta.dag_csr()  # frozen graph of THIS epoch
+        # chaos hook: a crash here must leave the old epoch serving and the
+        # epoch counter unchanged (regression: dynamic.publish injection)
+        inject.fire("dynamic.publish", epoch=self._epoch + 1, rebuilt=rebuilt)
+        # ---- commit ---------------------------------------------------
         # read the epoch window's churn BEFORE a rebuild swaps in a fresh
         # MutableLabels (whose counters start at zero) — rebuild epochs are
         # exactly the churn-heaviest ones
         appends, drops = self.labels.epoch_counters()
         if rebuilt:
-            self._rebuild_labels()
-        oracle = self._snapshot_oracle()
+            self.hop_rank = staged_rebuild["hop_rank"]
+            self.inv_rank = staged_rebuild["inv_rank"]
+            self.labels = staged_rebuild["labels"]
+            self.level = staged_rebuild["level"]
+            self._rebuild_pending = False
+            self._churn = 0
+            self.rebuild_count += 1
+        else:
+            self.labels.clear_dirty()
+        self._base_oracle = oracle
         self._epoch += 1
         self._install_epoch(oracle)
-        self.engine.refresh(oracle, level=self.level, epoch=self._epoch)
+        self.engine.refresh(oracle, level=self.level, epoch=self._epoch,
+                            fallback_graph=fallback)
         # growth-rate tracking: a persistently positive rate under churn is
         # rank drift (repairs distribute at stale build-time ranks) and
         # argues for re-ranking before the staleness budget fires

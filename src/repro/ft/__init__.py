@@ -1,3 +1,24 @@
-from repro.ft.loop import FaultTolerantLoop, SimulatedFailure
+"""Fault tolerance: the training loop's checkpoint/restart posture
+(``loop``) and the deterministic fault-injection harness the oracle
+lifecycle's chaos tests drive (``inject``)."""
+from repro.ft.inject import Injector, SimulatedFailure, active, fire, flip_bit, seeded
 
-__all__ = ["FaultTolerantLoop", "SimulatedFailure"]
+__all__ = [
+    "FaultTolerantLoop",
+    "SimulatedFailure",
+    "Injector",
+    "active",
+    "fire",
+    "flip_bit",
+    "seeded",
+]
+
+
+def __getattr__(name):
+    # FaultTolerantLoop pulls in jax + the checkpointer; keep that import
+    # out of consumers that only need the injection hooks (repro.persist)
+    if name == "FaultTolerantLoop":
+        from repro.ft.loop import FaultTolerantLoop
+
+        return FaultTolerantLoop
+    raise AttributeError(name)

@@ -1,0 +1,140 @@
+"""Deterministic fault injection for the oracle lifecycle.
+
+``ft/loop.py`` proved the posture for the training loop with a single
+``fail_at`` hook; this module promotes it into a registry of named,
+seed-addressable injection points that the chaos test suite (and the
+``repro.launch.chaos`` smoke driver) aims at production code paths:
+
+  ========================  =====================================================
+  site                      fired by
+  ========================  =====================================================
+  ``build.wave``            ``build/engine.py`` before each wave sweep
+  ``build.chunk``           before each speculative chunk
+  ``build.spec_replay``     ``_correct_chunk`` between watermark rollback and
+                            the surviving-entry re-append
+  ``dynamic.publish``       ``dynamic/versioned.py`` mid-publish, after the
+                            staged compacting rebuild, before the commit point
+  ``serve.device_dispatch``  ``serve/engine.py`` before a device batch
+  ``persist.pre_rename``    ``persist/blocks.py`` after the tmp write, before
+                            the atomic rename
+  ========================  =====================================================
+
+Usage::
+
+    from repro.ft import inject
+
+    with inject.active(inject.Injector({"build.wave": 3})):
+        build_distribution_labels(g, impl="wave", checkpoint_dir=d)
+    # -> SimulatedFailure on the 4th (0-based index 3) wave boundary
+
+Injectors are deterministic: a rule maps a site to the occurrence index that
+fires (every ``fire`` call counts occurrences per site).  ``seeded`` derives
+the occurrence indices from a seed so chaos sweeps can address "a random but
+reproducible crash point" without hand-picking indices.  Production code
+calls ``fire`` unconditionally; with no active injector it is a counter
+bump and nothing more.
+
+``flip_bit`` is the load-time corruption primitive: one deterministic bit
+flip in a file on disk, for testing that checksummed loads fail loudly.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Dict, Iterable, List, Optional, Union
+
+import numpy as np
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by a fault-injection hook to emulate a crash.
+
+    (Historically defined in ``ft/loop.py``; it lives here now and is
+    re-exported there for compatibility.)"""
+
+
+Rule = Union[int, Iterable[int]]
+
+
+class Injector:
+    """Deterministic injection plan: site -> occurrence index(es) that fail.
+
+    ``rules`` maps a site name to the 0-based occurrence index at which
+    ``fire(site)`` raises ``SimulatedFailure`` (or an iterable of such
+    indexes).  Occurrence counts live on the injector, so one plan can be
+    inspected after the run (``counts``) and a fresh plan replays
+    identically."""
+
+    def __init__(self, rules: Dict[str, Rule]):
+        self.rules: Dict[str, frozenset] = {
+            site: frozenset([at]) if isinstance(at, (int, np.integer)) else frozenset(at)
+            for site, at in rules.items()
+        }
+        self.counts: Dict[str, int] = {}
+        self.fired: List[str] = []
+
+    def fire(self, site: str, **info) -> None:
+        idx = self.counts.get(site, 0)
+        self.counts[site] = idx + 1
+        if idx in self.rules.get(site, ()):
+            detail = " ".join(f"{k}={v}" for k, v in sorted(info.items()))
+            self.fired.append(site)
+            raise SimulatedFailure(
+                f"injected failure at {site}[{idx}]" + (f" ({detail})" if detail else ""))
+
+
+def seeded(seed: int, sites: Dict[str, int]) -> Injector:
+    """Seed-addressable plan: for each ``site -> horizon`` pick one
+    occurrence index in ``[0, horizon)`` deterministically from ``seed``.
+    Sites are consumed in sorted order so the plan depends only on
+    ``(seed, sites)``."""
+    rng = np.random.default_rng(seed)
+    return Injector({s: int(rng.integers(0, max(int(h), 1)))
+                     for s, h in sorted(sites.items())})
+
+
+# ------------------------------------------------------------ active stack
+
+_ACTIVE: List[Injector] = []
+
+
+@contextlib.contextmanager
+def active(injector: Injector):
+    """Install ``injector`` for the duration of the block (stackable)."""
+    _ACTIVE.append(injector)
+    try:
+        yield injector
+    finally:
+        _ACTIVE.remove(injector)
+
+
+def fire(site: str, **info) -> None:
+    """Production-side hook: raise if any active injector targets this
+    occurrence of ``site``.  No-op (beyond counting) otherwise."""
+    for inj in _ACTIVE:
+        inj.fire(site, **info)
+
+
+# ------------------------------------------------------- corruption tool
+
+def flip_bit(path: str, seed: int = 0, offset: Optional[int] = None) -> int:
+    """Flip one bit of the file at ``path`` in place; returns the byte
+    offset touched.  Deterministic in ``(file size, seed)`` unless an
+    explicit ``offset`` is given.  This is the chaos suite's "disk
+    corruption" primitive for proving checksummed loads fail loudly."""
+    size = os.path.getsize(path)
+    if size == 0:
+        raise ValueError(f"cannot corrupt empty file {path}")
+    if offset is None:
+        rng = np.random.default_rng(seed)
+        # skip the first 16 bytes: corrupting an npy magic/header tests the
+        # parser, not the checksum — the payload is the interesting target
+        lo = min(16, size - 1)
+        offset = int(rng.integers(lo, size))
+    bit = 1 << int(np.random.default_rng(seed + 1).integers(0, 8))
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        byte = f.read(1)
+        f.seek(offset)
+        f.write(bytes([byte[0] ^ bit]))
+    return offset

@@ -28,10 +28,9 @@ from typing import Any, Callable, Dict, Optional
 import jax
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
-
-
-class SimulatedFailure(RuntimeError):
-    """Raised by a fault-injection hook to emulate a node crash."""
+# SimulatedFailure moved to repro.ft.inject (the shared fault-injection
+# harness); re-exported here so existing imports keep working
+from repro.ft.inject import SimulatedFailure  # noqa: F401
 
 
 class FaultTolerantLoop:

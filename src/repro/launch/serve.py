@@ -19,6 +19,7 @@ import time
 import numpy as np
 
 from repro.core.api import build_oracle
+from repro.ft import inject
 from repro.serve.engine import select_backend
 from repro.graph.generators import paper_dataset_analogue, random_dag
 from repro.graph.reach import reachable_set
@@ -33,14 +34,24 @@ def build(args):
         else random_dag(20000, 50000, seed=args.seed)
     )
     print(f"graph: n={g.n} m={g.m}")
+    ckpt_kwargs = {}
+    if args.checkpoint_dir:
+        # crash-safe build: wave-granular checkpoints; a re-run with the same
+        # flags resumes from the latest complete one and finishes byte-identical
+        ckpt_kwargs = dict(checkpoint_dir=args.checkpoint_dir,
+                           checkpoint_every=args.checkpoint_every)
     t0 = time.perf_counter()
-    oracle = build_oracle(g, bucketing=not args.no_bucketing)
+    oracle = build_oracle(g, bucketing=not args.no_bucketing, **ckpt_kwargs)
     t_build = time.perf_counter() - t0
     print(
         f"DL build: {t_build:.2f}s  label ints={oracle.total_label_size} "
         f"(avg {oracle.total_label_size / g.n:.1f}/vertex)  "
         f"tier widths={oracle.engine.widths}"
     )
+    ck = getattr(oracle.oracle, "build_stats", {}).get("checkpoint")
+    if ck is not None:
+        print(f"checkpoints: resumed_from={ck['resumed_from']} "
+              f"written={ck['written']} -> {args.checkpoint_dir}")
     return g, oracle
 
 
@@ -80,6 +91,16 @@ def main() -> None:
                     help="disable length-bucketed micro-batching")
     ap.add_argument("--json-out", default=None,
                     help="write per-backend M-qps results to this JSON file")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="wave-granular build checkpoints; re-running with the "
+                         "same flags resumes from the latest complete one")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="schedule boundaries between checkpoints")
+    ap.add_argument("--inject-device-failure", type=int, default=None,
+                    metavar="K",
+                    help="fault-inject the K-th device dispatch of each serve "
+                         "run; queries degrade to the host rung (counted, "
+                         "never a wrong verdict)")
     args = ap.parse_args()
 
     backends = list(HOST_BACKENDS) if args.backend == "all" else [args.backend]
@@ -97,7 +118,15 @@ def main() -> None:
     records = {}
     failed = False
     for be in backends:
-        dt, pred = serve_loop(oracle, queries, args.batch, be)
+        deg0 = dict(oracle.engine.degradation)
+        if args.inject_device_failure is not None:
+            # fresh plan per backend: occurrence counters live on the injector
+            plan = inject.Injector(
+                {"serve.device_dispatch": args.inject_device_failure})
+            with inject.active(plan):
+                dt, pred = serve_loop(oracle, queries, args.batch, be)
+        else:
+            dt, pred = serve_loop(oracle, queries, args.batch, be)
         stats = oracle.engine.last_stats
         mqps = args.n_queries / dt / 1e6
         print(
@@ -105,6 +134,11 @@ def main() -> None:
             f"({mqps:.2f} M qps; {dt / args.n_queries * 1e9:.0f} ns/query)  "
             f"prefiltered {stats['n_prefiltered']}/{stats['n_queries']} of last batch"
         )
+        deg = {k: v - deg0[k] for k, v in oracle.engine.degradation.items()}
+        if any(deg.values()):
+            print(f"[{stats['backend']}] degradation: "
+                  f"device->host={deg['device_to_host']} "
+                  f"searched={deg['searched']} quarantined={deg['quarantined']}")
         bad = check_sample(g, queries, pred)
         n_check = min(200, args.n_queries)
         print(f"[{stats['backend']}] correctness sample: {n_check - bad}/{n_check} ok")
@@ -114,6 +148,7 @@ def main() -> None:
             "ns_per_query": round(dt / args.n_queries * 1e9, 1),
             "bucketing": not args.no_bucketing,
             "sample_errors": bad,
+            "degradation": dict(deg),
         }
 
     if args.json_out:

@@ -1,0 +1,53 @@
+"""Verified persistence for the oracle lifecycle.
+
+Everything durable in the repo routes through this package:
+
+  * ``blocks`` — the storage primitive: a directory of named array blocks,
+    CRC32 per block + a manifest hash over the block table, written
+    temp-then-rename so a crash mid-save never corrupts the previous
+    snapshot.  Loads verify every checksum; ``strict=False`` quarantines
+    bad blocks instead of raising (the serve-path degradation ladder's
+    input).
+  * ``oracle_io`` — checksummed save/load of ``ReachabilityOracle`` and
+    ``LabelEpoch`` snapshots (label matrices split into row blocks so
+    corruption quarantines a block of rows, not the whole index).
+  * ``wal`` — the write-ahead log for dynamic edge updates: fixed-width
+    CRC-framed records, torn-tail truncation on replay, seq-addressed so
+    recovery replays exactly the records after the last snapshot.
+
+The build engine's wave-granular checkpoints (``repro.build.engine``) and
+the durable dynamic oracle (``repro.dynamic.durable``) are the two big
+consumers.
+"""
+from repro.persist.blocks import (
+    CorruptSnapshotError,
+    load_blocks,
+    pack_ragged,
+    save_blocks,
+    snapshot_meta,
+    unpack_ragged,
+)
+from repro.persist.oracle_io import (
+    LoadReport,
+    load_epoch,
+    load_oracle,
+    save_epoch,
+    save_oracle,
+)
+from repro.persist.wal import WalRecord, WriteAheadLog
+
+__all__ = [
+    "CorruptSnapshotError",
+    "save_blocks",
+    "load_blocks",
+    "snapshot_meta",
+    "pack_ragged",
+    "unpack_ragged",
+    "save_oracle",
+    "load_oracle",
+    "save_epoch",
+    "load_epoch",
+    "LoadReport",
+    "WriteAheadLog",
+    "WalRecord",
+]

@@ -23,6 +23,7 @@ dense otherwise.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Optional, Sequence
 
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft import inject
 from repro.graph.csr import INVALID
 from repro.serve.planner import BatchPlan, plan_batch, tier_widths
 from repro.serve.prefilter import apply_prefilters
@@ -177,6 +179,22 @@ class QueryEngine:
     epoch : int
         Label-snapshot epoch this engine currently serves (see
         ``repro.dynamic.versioned``); bumped by ``refresh``.
+    fallback_graph : optional CSRGraph or callable -> CSRGraph
+        The DAG the labels index, in the ORACLE'S id space — the bottom rung
+        of the degradation ladder (exact bidirectional online search when
+        labels cannot be trusted).  Must be the graph of the SERVED epoch:
+        owners with a mutating working graph (``repro.dynamic``) pass a
+        frozen snapshot at every ``refresh``, never a live view.
+
+    Degradation ladder
+    ------------------
+    Queries normally run device-side (kernel / dense / sharded).  A device
+    backend failure downgrades the whole sub-batch to the host merge path
+    (same labels, same verdicts); a query touching a *quarantined* label row
+    (``set_quarantine`` — rows a non-strict snapshot load could not verify)
+    skips labels entirely and runs the exact online search.  Every rung
+    returns correct verdicts; ``self.degradation`` counts how often each
+    downgrade fired so operators see corruption as a metric, not an outage.
     """
 
     def __init__(
@@ -192,6 +210,7 @@ class QueryEngine:
         min_tile: int = 256,
         comp_source=None,
         epoch: int = 0,
+        fallback_graph=None,
     ):
         self.oracle = oracle
         self.mesh = mesh
@@ -214,11 +233,17 @@ class QueryEngine:
         )
         self._sharded_fns: dict = {}
         self.last_stats: dict = {}
+        self._fallback_graph = fallback_graph
+        self._fallback_csr = None   # resolved (graph, reverse) pair, lazy
+        self.quarantine_out: Optional[np.ndarray] = None
+        self.quarantine_in: Optional[np.ndarray] = None
+        # cumulative downgrade counters (ladder observability)
+        self.degradation = {"device_to_host": 0, "searched": 0, "quarantined": 0}
 
     # ---------------------------------------------------------- publishing
 
     def refresh(self, oracle, level: Optional[np.ndarray] = None,
-                epoch: Optional[int] = None) -> None:
+                epoch: Optional[int] = None, fallback_graph=None) -> None:
         """Swap in a newly published label snapshot (epoch invalidation).
 
         Device label arrays and the tier-width plan refresh ONLY here — never
@@ -236,6 +261,53 @@ class QueryEngine:
             oracle.out_len, oracle.in_len, oracle.max_label_len, n_tiers=self.n_tiers
         )
         self.epoch = self.epoch + 1 if epoch is None else int(epoch)
+        if fallback_graph is not None:
+            self._fallback_graph = fallback_graph
+        # the ladder's search rung must answer against the newly served
+        # epoch's graph — drop the previous epoch's resolved snapshot
+        self._fallback_csr = None
+        # new labels supersede any previous load-time quarantine
+        self.quarantine_out = None
+        self.quarantine_in = None
+
+    # ------------------------------------------------- degradation ladder
+
+    def set_quarantine(self, quarantine_out: Optional[np.ndarray],
+                       quarantine_in: Optional[np.ndarray]) -> None:
+        """Mark label rows that must not be trusted (``persist.LoadReport``
+        masks from a non-strict snapshot load).  Queries touching them route
+        to the online-search rung instead of reading the rows."""
+        def _norm(q):
+            if q is None or not np.any(q):
+                return None
+            return np.asarray(q, dtype=bool)
+
+        self.quarantine_out = _norm(quarantine_out)
+        self.quarantine_in = _norm(quarantine_in)
+
+    def _fallback(self):
+        """Resolve the fallback graph to a cached (g, g_rev) pair."""
+        if self._fallback_csr is None:
+            g = self._fallback_graph
+            if g is None:
+                raise RuntimeError(
+                    "degradation ladder exhausted: quarantined label rows "
+                    "need the online-search rung, but no fallback_graph was "
+                    "configured on this QueryEngine")
+            if callable(g):
+                g = g()
+            self._fallback_csr = (g, g.reverse())
+        return self._fallback_csr
+
+    def _search_batch(self, rest: np.ndarray) -> np.ndarray:
+        """Bottom rung: exact bidirectional search, no label reads."""
+        from repro.core.baselines.online_search import bidirectional_query
+
+        g, g_rev = self._fallback()
+        out = np.empty(rest.shape[0], dtype=bool)
+        for i, (u, v) in enumerate(rest):
+            out[i] = bidirectional_query(g, g_rev, int(u), int(v))
+        return out
 
     # ------------------------------------------------------------- queries
 
@@ -252,6 +324,13 @@ class QueryEngine:
             u, v = int(comp[u]), int(comp[v])
         if u == v:
             return True
+        if (self.quarantine_out is not None and self.quarantine_out[u]) or (
+                self.quarantine_in is not None and self.quarantine_in[v]):
+            # untrusted rows: even the length/level prefilters would read
+            # corrupt state — go straight to the search rung
+            self.degradation["quarantined"] += 1
+            self.degradation["searched"] += 1
+            return bool(self._search_batch(np.asarray([[u, v]]))[0])
         o = self.oracle
         if o.out_len[u] == 0 or o.in_len[v] == 0:
             return False
@@ -270,33 +349,77 @@ class QueryEngine:
         queries = np.ascontiguousarray(np.asarray(queries, dtype=np.int32))
         backend = self.backend if backend is None else select_backend(backend, self.mesh)
         o = self.oracle
+        out = np.zeros(queries.shape[0], dtype=bool)
+        degraded = {"device_to_host": 0, "searched": 0, "quarantined": 0}
 
-        pf = apply_prefilters(queries, o.out_len, o.in_len, self.level)
-        out = pf.decided & pf.value
-        rest_idx = np.nonzero(~pf.decided)[0]
+        # ladder rung 0 (when needed): queries touching quarantined label
+        # rows bypass prefilters TOO — length/level prefilters read the very
+        # state that failed verification, and a zero-filled out_len would
+        # flip verdicts to False.  Everything they need comes from the
+        # fallback graph.
+        label_idx = np.arange(queries.shape[0])
+        if self.quarantine_out is not None or self.quarantine_in is not None:
+            qm = np.zeros(queries.shape[0], dtype=bool)
+            if self.quarantine_out is not None:
+                qm |= self.quarantine_out[queries[:, 0]]
+            if self.quarantine_in is not None:
+                qm |= self.quarantine_in[queries[:, 1]]
+            q_idx = np.nonzero(qm)[0]
+            if q_idx.size:
+                degraded["quarantined"] += int(q_idx.size)
+                degraded["searched"] += int(q_idx.size)
+                out[q_idx] = self._search_batch(queries[q_idx])
+                label_idx = np.nonzero(~qm)[0]
+
+        pf = apply_prefilters(queries[label_idx], o.out_len, o.in_len, self.level)
+        out[label_idx] = pf.decided & pf.value
+        rest_idx = label_idx[~pf.decided]
         self.last_stats = {
             "backend": backend,
             "n_queries": int(queries.shape[0]),
-            "n_prefiltered": int(queries.shape[0] - rest_idx.size),
+            "n_prefiltered": int(label_idx.shape[0] - rest_idx.size),
             "tiers": [],
+            "degraded": degraded,
         }
         if rest_idx.size == 0:
+            self._tally(degraded)
             return out
         rest = queries[rest_idx]
 
         if backend == "host":
-            res = np.fromiter((o.query(int(u), int(v)) for u, v in rest), dtype=bool,
-                              count=rest.shape[0])
-        elif backend in ("dense", "kernel"):
-            res = self._device_batch(rest, use_kernel=backend == "kernel")
+            res = self._host_batch(rest)
         else:
-            res = self._sharded_batch(rest, backend)
+            try:
+                if backend in ("dense", "kernel"):
+                    res = self._device_batch(rest, use_kernel=backend == "kernel")
+                else:
+                    res = self._sharded_batch(rest, backend)
+            except Exception as e:  # ladder: device failure -> host merge
+                degraded["device_to_host"] += int(rest.shape[0])
+                warnings.warn(
+                    f"{backend!r} backend failed ({type(e).__name__}: {e}); "
+                    f"serving {rest.shape[0]} queries on the host merge path",
+                    stacklevel=2)
+                res = self._host_batch(rest)
         out[rest_idx] = res
+        self._tally(degraded)
         return out
+
+    def _host_batch(self, rest: np.ndarray) -> np.ndarray:
+        o = self.oracle
+        return np.fromiter((o.query(int(u), int(v)) for u, v in rest), dtype=bool,
+                           count=rest.shape[0])
+
+    def _tally(self, degraded: dict) -> None:
+        for k, v in degraded.items():
+            self.degradation[k] += v
 
     # ------------------------------------------------------------ backends
 
     def _device_batch(self, rest: np.ndarray, use_kernel: bool) -> np.ndarray:
+        # chaos hook: an injected device failure here exercises the ladder's
+        # device -> host downgrade in query_batch
+        inject.fire("serve.device_dispatch", backend="kernel" if use_kernel else "dense")
         o = self.oracle
         if not self.bucketing:
             r = serve_step(self._lo, self._li, jnp.asarray(rest), use_kernel=use_kernel)
@@ -312,6 +435,7 @@ class QueryEngine:
         return plan.scatter([np.asarray(r) for r in results])
 
     def _sharded_batch(self, rest: np.ndarray, backend: str) -> np.ndarray:
+        inject.fire("serve.device_dispatch", backend=backend)
         fn = self._sharded_fns.get(backend)
         if fn is None:
             if backend == "sharded":

@@ -1,0 +1,239 @@
+"""Chaos suite: deterministic fault injection across the oracle lifecycle.
+
+Acceptance properties (ISSUE: crash-safe oracle lifecycle):
+  * a build killed at an arbitrary wave/chunk boundary — including the
+    worst-case window between a speculative rollback and its replay —
+    resumes from the latest checkpoint and finishes BYTE-IDENTICAL to an
+    uninterrupted run, on all five test graph families,
+  * a crashed ``DurableDynamicOracle`` recovers as snapshot + WAL replay
+    and its verdicts agree with a fresh rebuild fed the same updates,
+  * a failed publish leaves the previous epoch serving (transactional) and
+    stays retryable,
+  * a serve-path device failure or corrupt/quarantined label row degrades
+    per-query down the ladder — counted, never a wrong verdict.
+
+All injections go through ``repro.ft.inject`` and are addressed by
+(site, occurrence-index), so every crash point here is reproducible.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.build.engine import build_distribution_labels
+from repro.core.api import build_oracle
+from repro.dynamic import DurableDynamicOracle, DynamicOracle, UpdateBatch
+from repro.ft import inject
+from repro.ft.inject import SimulatedFailure
+from repro.graph.csr import from_edges
+from repro.graph.generators import random_dag
+from repro.persist import CorruptSnapshotError, load_oracle, save_oracle
+from repro.serve.engine import QueryEngine
+
+from test_build_engine import _assert_identical, _dag_families
+
+pytestmark = pytest.mark.chaos
+
+
+def _crash_then_resume(g, impl, rules, d, tag):
+    """Kill a checkpointed build via ``rules``, rebuild from the same dir,
+    and require byte-identity with the uninterrupted build."""
+    want = build_distribution_labels(g, impl=impl)
+    crashed = False
+    try:
+        with inject.active(inject.Injector(rules)):
+            build_distribution_labels(g, impl=impl, checkpoint_dir=str(d),
+                                      checkpoint_every=1)
+    except SimulatedFailure:
+        crashed = True
+    assert crashed, f"{tag}: injection never fired — the test exercised nothing"
+    got = build_distribution_labels(g, impl=impl, checkpoint_dir=str(d),
+                                    checkpoint_every=1)
+    _assert_identical(want, got, tag)
+    return got
+
+
+def test_wave_build_kill_and_resume_all_families(rng, tmp_path):
+    for name, g in _dag_families(rng):
+        got = _crash_then_resume(g, "wave", {"build.wave": 2},
+                                 tmp_path / name, name)
+        assert got.build_stats["checkpoint"]["resumed_from"] == 2, name
+
+
+def test_speculative_build_kill_and_resume_all_families(rng, tmp_path):
+    # every family's speculative schedule has at least one optimistic chunk
+    for name, g in _dag_families(rng):
+        _crash_then_resume(g, "speculative", {"build.chunk": 0},
+                           tmp_path / name, name)
+
+
+def test_speculative_crash_between_rollback_and_replay(rng, tmp_path):
+    """The worst-case crash window: the watermark rollback has destroyed the
+    optimistic appends but the corrected replay has not landed yet.  The
+    checkpoint cursor sits at the previous chunk boundary, so resume replays
+    the whole chunk — composed watermark rollback + resume stays exact."""
+    for name, g in _dag_families(rng):
+        _crash_then_resume(g, "speculative", {"build.spec_replay": 0},
+                           tmp_path / name, name)
+
+
+def test_resume_after_multiple_crashes(tmp_path):
+    """Crash, resume, crash later, resume again — checkpoints stack."""
+    g = random_dag(300, 1200, seed=7)
+    want = build_distribution_labels(g, impl="wave")
+    for wave_at in (3, 9):
+        with pytest.raises(SimulatedFailure):
+            with inject.active(inject.Injector({"build.wave": wave_at})):
+                build_distribution_labels(g, impl="wave",
+                                          checkpoint_dir=str(tmp_path),
+                                          checkpoint_every=1)
+    got = build_distribution_labels(g, impl="wave", checkpoint_dir=str(tmp_path),
+                                    checkpoint_every=1)
+    # occurrence counting restarts on resume, so the second crash lands past
+    # wave 9 in absolute terms — the checkpoints still stack monotonically
+    assert got.build_stats["checkpoint"]["resumed_from"] >= 9
+    _assert_identical(want, got, "double crash")
+
+
+# ----------------------------------------------------------- dynamic oracle
+
+def _structural_batches(g, rng, k=3, per=8):
+    """Update batches with repeats of existing edges deleted and random
+    inserts — enough to exercise SCC merges/splits on a cyclic graph."""
+    batches = []
+    src, dst = g.edges()
+    for _ in range(k):
+        ins = [(int(rng.integers(0, g.n)), int(rng.integers(0, g.n)))
+               for _ in range(per)]
+        picks = rng.integers(0, src.shape[0], size=per // 2)
+        dels = [(int(src[i]), int(dst[i])) for i in picks]
+        batches.append(UpdateBatch.of(
+            inserts=[(u, v) for u, v in ins if u != v], deletes=dels))
+    return batches
+
+
+def test_durable_recovery_agrees_with_fresh_rebuild(rng, tmp_path):
+    # cyclic input: recovery must restore the incrementally maintained
+    # condensation (comp ids), not re-run Tarjan over the final graph
+    n = 60
+    src, dst = rng.integers(0, n, 170), rng.integers(0, n, 170)
+    g = from_edges(n, src, dst)
+    batches = _structural_batches(g, rng)
+
+    dur = DurableDynamicOracle(g, state_dir=str(tmp_path))
+    dur.apply(batches[0])
+    dur.publish()
+    dur.apply(batches[1])
+    dur.publish()
+    dur.apply(batches[2])  # acknowledged, not yet published
+    del dur  # crash
+
+    rec = DurableDynamicOracle.recover(str(tmp_path))
+    ref = DynamicOracle(g)
+    for b in batches:
+        ref.apply(b)
+    ref.publish()
+    # the unpublished tail was WAL-durable: recovery re-publishes it
+    assert rec.recovered_records > 0
+    q = rng.integers(0, n, size=(2000, 2)).astype(np.int32)
+    assert np.array_equal(rec.serve(q), ref.serve(q))
+
+
+def test_durable_recovery_skips_corrupt_snapshot(rng, tmp_path):
+    g = random_dag(50, 150, seed=9)
+    dur = DurableDynamicOracle(g, state_dir=str(tmp_path))
+    dur.apply(UpdateBatch.of(inserts=[(0, 49), (3, 41)]))
+    dur.publish()
+    q = rng.integers(0, 50, size=(500, 2)).astype(np.int32)
+    want = dur.serve(q)
+    del dur
+    # corrupt the NEWEST snapshot: recovery must fall back to the previous
+    # one and replay the WAL across the gap
+    import os
+    snaps = sorted(d for d in os.listdir(tmp_path) if d.startswith("snap_"))
+    assert len(snaps) == 2
+    inject.flip_bit(str(tmp_path / snaps[-1] / "L_out.npy"), seed=2)
+    with pytest.warns(UserWarning, match="skipping unusable snapshot"):
+        rec = DurableDynamicOracle.recover(str(tmp_path))
+    assert np.array_equal(rec.serve(q), want)
+
+
+def test_publish_is_transactional_and_retryable(rng):
+    n = 60
+    src, dst = rng.integers(0, n, 170), rng.integers(0, n, 170)
+    g = from_edges(n, src, dst)
+    dyn = DynamicOracle(g)
+    batch = _structural_batches(g, rng, k=1)[0]
+    dyn.apply(batch)
+    q = rng.integers(0, n, size=(1500, 2)).astype(np.int32)
+    before = dyn.serve(q)
+    with pytest.raises(SimulatedFailure):
+        with inject.active(inject.Injector({"dynamic.publish": 0})):
+            dyn.publish()
+    # failed publish: epoch unchanged, the old epoch still serves
+    assert dyn._epoch == 0
+    assert np.array_equal(dyn.serve(q), before)
+    # and the publish stays retryable — same result as never having crashed
+    assert dyn.publish() == 1
+    ref = DynamicOracle(g)
+    ref.apply(batch)
+    ref.publish()
+    assert np.array_equal(dyn.serve(q), ref.serve(q))
+
+
+# -------------------------------------------------------------- serve ladder
+
+def test_device_failure_degrades_to_host_same_verdicts(rng):
+    for name, g in _dag_families(rng):
+        co = build_oracle(g, method="distribution", impl="reference")
+        q = rng.integers(0, g.n, size=(800, 2)).astype(np.int32)
+        want = co.engine.query_batch(q, backend="host")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with inject.active(inject.Injector({"serve.device_dispatch": 0})):
+                got = co.engine.query_batch(q, backend="dense")
+        assert np.array_equal(got, want), name
+        assert co.engine.degradation["device_to_host"] > 0, name
+
+
+def test_corrupt_label_rows_degrade_to_search_same_verdicts(rng, tmp_path):
+    """End-to-end acceptance: save, corrupt on disk, load non-strict, serve
+    with the load's quarantine masks — every verdict still correct."""
+    g = random_dag(130, 420, seed=4)
+    oracle = build_distribution_labels(g, impl="wave")
+    from repro.serve.prefilter import topo_levels
+
+    p = save_oracle(str(tmp_path / "oracle"), oracle, row_block=64)
+    inject.flip_bit(str(tmp_path / "oracle" / "L_out.00001.npy"), seed=1)
+    with pytest.raises(CorruptSnapshotError):
+        load_oracle(p)  # strict load fails loudly
+    with pytest.warns(UserWarning):
+        loaded, report = load_oracle(p, strict=False)
+    assert not report.clean
+
+    eng = QueryEngine(loaded, backend="host", level=topo_levels(g),
+                      fallback_graph=g)
+    eng.set_quarantine(report.quarantine_out, report.quarantine_in)
+    ref = QueryEngine(oracle, backend="host", level=topo_levels(g))
+    q = rng.integers(0, g.n, size=(2500, 2)).astype(np.int32)
+    assert np.array_equal(eng.query_batch(q), ref.query_batch(q))
+    assert eng.degradation["quarantined"] > 0
+    assert eng.degradation["searched"] == eng.degradation["quarantined"]
+    # single-query path takes the same ladder
+    u = int(np.flatnonzero(report.quarantine_out)[0])
+    for v in range(0, g.n, 7):
+        assert eng.query(u, v) == ref.query(u, v)
+
+
+def test_quarantine_cleared_by_refresh(rng):
+    g = random_dag(80, 240, seed=6)
+    oracle = build_distribution_labels(g, impl="wave")
+    eng = QueryEngine(oracle, backend="host", fallback_graph=g)
+    eng.set_quarantine(np.ones(g.n, dtype=bool), None)
+    q = rng.integers(0, g.n, size=(300, 2)).astype(np.int32)
+    eng.query_batch(q)
+    assert eng.degradation["searched"] > 0
+    eng.refresh(oracle)  # new labels supersede the load-time quarantine
+    n0 = eng.degradation["searched"]
+    eng.query_batch(q)
+    assert eng.degradation["searched"] == n0
