@@ -158,10 +158,59 @@ def _field(row: dict, path: str, key: str, origin: str, out) -> object:
     return cur
 
 
+def _serve_invariants(payload: dict, origin: str, out) -> list:
+    """Machine-robust invariants every serve record must satisfy.
+
+    Absolute latency/throughput numbers never gate (they don't transfer
+    across hardware); these do, because admission control is precisely the
+    mechanism that holds them regardless of machine speed:
+      * every backend row and open-loop row answered with zero wrong answers,
+      * open-loop p99 of ADMITTED queries stayed inside the deadline (the
+        daemon sheds rather than serving late — a violated deadline means
+        shedding broke, not that the machine was slow),
+      * the device-faulted row actually shed (queue bound + injected stalls
+        are sized to force overflow; zero sheds means backpressure is
+        disconnected) while still answering some queries,
+      * the faulted row's engine ladder saw activity (device->host or
+        breaker host batches) — faults that fault nothing gate nothing.
+    """
+    bad = []
+    for be, rec in payload.get("backends", {}).items():
+        if rec.get("sample_errors", 0):
+            bad.append(f"serve[{origin}/{be}]: {rec['sample_errors']} "
+                       f"sample errors recorded")
+    for name, row in (payload.get("open_loop") or {}).items():
+        where = f"serve[{origin}/open_loop.{name}]"
+        if row.get("sample_errors", 0):
+            bad.append(f"{where}: {row['sample_errors']} wrong answers")
+        if not row.get("answered", 0):
+            bad.append(f"{where}: answered no queries at all")
+        if not row.get("p99_within_deadline", True):
+            bad.append(f"{where}: p99 {row.get('p99_ms')}ms blew the "
+                       f"{row.get('deadline_ms')}ms deadline — load shedding "
+                       f"failed to protect admitted queries")
+        if name == "device_faulted":
+            if row.get("shed_rate", 0) <= 0:
+                bad.append(f"{where}: zero sheds under forced overload — "
+                           f"backpressure is disconnected")
+            if row.get("shed_rate", 0) >= 0.9:
+                bad.append(f"{where}: shed_rate {row['shed_rate']} — the "
+                           f"daemon shed nearly everything")
+            deg = row.get("degradation") or {}
+            ladder = (deg.get("device_to_host", 0)
+                      + row.get("breaker_host_batches", 0))
+            if not ladder:
+                bad.append(f"{where}: injected device faults produced no "
+                           f"ladder activity (device_to_host=0, "
+                           f"breaker_host_batches=0)")
+    return bad
+
+
 def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
                    ratio_tol: float = 0.25,
                    serve_path: str = "BENCH_serve.json",
-                   dynamic_path: str = "BENCH_dynamic.json", out=print) -> list:
+                   dynamic_path: str = "BENCH_dynamic.json",
+                   serve_fresh_path: str = None, out=print) -> list:
     """Diff a freshly written BENCH_build JSON against the committed
     trajectory; returns the list of regressions (empty = monotone).
 
@@ -186,9 +235,15 @@ def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
     The fresh record's device_engine rows (sparse device wave engine) gate
     unconditionally on byte-identity — that check is deterministic.
     The committed BENCH_serve.json and BENCH_dynamic.json ride along as
-    tripwires: recorded per-backend sample_errors must all be zero, the
-    dynamic record's rebuild-agreement check must show zero mismatches, and
-    its repair-vs-rebuild ratio must stay at or above the 5x acceptance bar.
+    tripwires: every serve record (backend rows AND open-loop daemon rows)
+    must satisfy ``_serve_invariants`` — zero wrong answers, p99 of admitted
+    queries inside the deadline, and real shedding + ladder activity in the
+    device-faulted row; the dynamic record's rebuild-agreement check must
+    show zero mismatches, and its repair-vs-rebuild ratio must stay at or
+    above the 5x acceptance bar.  ``serve_fresh_path`` (the CI open-loop
+    smoke's just-written record) gets the same invariants plus a shed-rate
+    regression gate against the committed faulted row when both ran the
+    same workload config.
     """
     import json
     import os
@@ -241,13 +296,34 @@ def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
         if not row.get("labels_match_reference", False):
             regressions.append(
                 f"device[{key}]: sparse device engine labels not byte-identical")
+    committed_serve = None
     if os.path.exists(serve_path):
         with open(serve_path) as f:
-            serve = json.load(f)
-        for be, rec in serve.get("backends", {}).items():
-            if rec.get("sample_errors", 0):
+            committed_serve = json.load(f)
+        regressions += _serve_invariants(committed_serve, "committed", out)
+    if serve_fresh_path is not None and os.path.exists(serve_fresh_path):
+        # a freshly produced serve record (the CI open-loop smoke, or a
+        # regenerated BENCH_serve.json): same invariants, plus a shed-rate
+        # regression gate against the committed faulted row when the two
+        # records ran the same workload config
+        with open(serve_fresh_path) as f:
+            fresh_serve = json.load(f)
+        regressions += _serve_invariants(fresh_serve, "fresh", out)
+        fr = (fresh_serve.get("open_loop") or {}).get("device_faulted")
+        cr = ((committed_serve or {}).get("open_loop") or {}).get(
+            "device_faulted")
+        if fr and cr:
+            same_workload = all(
+                fr.get(k) == cr.get(k)
+                for k in ("rate_arrivals_per_s", "arrival_batch",
+                          "duration_s", "deadline_ms"))
+            if same_workload and fr.get("shed_rate", 0) > (
+                    cr.get("shed_rate", 0) + 0.25):
                 regressions.append(
-                    f"serve[{be}]: {rec['sample_errors']} sample errors recorded")
+                    f"serve[open_loop.device_faulted]: shed_rate regressed "
+                    f"{cr.get('shed_rate')} -> {fr.get('shed_rate')} "
+                    f"(> 0.25 absolute slack) — the daemon now refuses far "
+                    f"more of the same workload")
     if os.path.exists(dynamic_path):
         with open(dynamic_path) as f:
             dyn = json.load(f)

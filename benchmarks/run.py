@@ -22,16 +22,18 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        choices=[None, "query_time", "construction_time", "index_size", "kernel_bench"],
+        choices=[None, "query_time", "construction_time", "index_size",
+                 "kernel_bench", "serve_smoke"],
     )
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: construction section only, tiny dataset")
     ap.add_argument("--ci", action="store_true",
-                    help="medium-cost CI tier: construction section only on "
-                         "one mid-size dataset at best-of-4, so "
-                         "--check-monotone gates the engine speedup RATIO "
-                         "(single-rep quick rows are too noisy for the "
-                         "ratio gate)")
+                    help="medium-cost CI tier: construction section on one "
+                         "mid-size dataset at best-of-4 (so --check-monotone "
+                         "gates the engine speedup RATIO; single-rep quick "
+                         "rows are too noisy for that) plus a few-second "
+                         "open-loop serving-daemon smoke with an injected "
+                         "device fault (gated via the serve invariants)")
     ap.add_argument("--json-out", default=None,
                     help="where the construction section writes its JSON record "
                          "(default: BENCH_build.json, BENCH_build_quick.json "
@@ -48,12 +50,19 @@ def main() -> None:
                          else "BENCH_build_quick.json" if args.quick
                          else "BENCH_build.json")
 
-    from benchmarks import construction_time, index_size, kernel_bench, query_time
+    from benchmarks import (
+        construction_time,
+        index_size,
+        kernel_bench,
+        query_time,
+        serve_sweep,
+    )
     from benchmarks.common import check_monotone, load_trajectory
 
     # snapshot the committed trajectory before any section overwrites it
     trajectory = load_trajectory() if args.check_monotone else None
 
+    serve_ci_json = "BENCH_serve_ci.json"
     sections = {
         "kernel_bench": kernel_bench.run,
         "index_size": index_size.run,
@@ -61,9 +70,17 @@ def main() -> None:
             out=out, quick=args.quick, ci=args.ci, json_out=args.json_out
         ),
         "query_time": query_time.run,
+        "serve_smoke": lambda *, out: serve_sweep.ci_smoke(
+            json_out=serve_ci_json, out=out),
     }
     if (args.quick or args.ci) and not args.only:
+        # the CI tier adds the open-loop daemon smoke (faulted + clean) so
+        # overload robustness is gated per push, not just when the full
+        # serve benchmark is regenerated
         sections = {"construction_time": sections["construction_time"]}
+        if args.ci:
+            sections["serve_smoke"] = lambda *, out: serve_sweep.ci_smoke(
+                json_out=serve_ci_json, out=out)
     flushing = lambda s: print(s, flush=True)
     t0 = time.perf_counter()
     ran = set()
@@ -82,7 +99,10 @@ def main() -> None:
             raise SystemExit(
                 "--check-monotone: the construction section did not run "
                 f"(sections ran: {sorted(ran)}); drop --only")
-        regressions = check_monotone(args.json_out, trajectory, out=flushing)
+        regressions = check_monotone(
+            args.json_out, trajectory,
+            serve_fresh_path=(serve_ci_json if "serve_smoke" in ran else None),
+            out=flushing)
         if regressions:
             raise SystemExit(1)
 

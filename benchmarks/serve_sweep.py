@@ -1,31 +1,155 @@
-"""Backend-sweep serving benchmark -> BENCH_serve.json.
+"""Serving benchmark -> BENCH_serve.json: closed-loop backend sweep +
+open-loop daemon rows.
 
-Runs the QueryEngine over every single-host backend on the citeseer analogue
-and records M-qps per backend, so the serving-perf trajectory is tracked
-PR over PR.
+Phase 1 (backends section) runs the QueryEngine over every single-host
+backend on the citeseer analogue and records M-qps per backend — the
+serving-perf trajectory tracked PR over PR.
+
+Phase 2 (open_loop section) drives the serving daemon with an open-loop
+Poisson workload twice: a clean run, and a run with injected device stalls
+and hard failures at a deliberately overflowing queue.  The faulted row is
+the robustness record: it must show sheds (backpressure engaged), breaker
+and ladder activity, p99 of admitted queries inside the deadline, and zero
+wrong answers — those invariants are what ``--check-monotone`` gates.
 
   PYTHONPATH=src python -m benchmarks.serve_sweep
   PYTHONPATH=src python -m benchmarks.serve_sweep --scale 0.05 --n-queries 200000
+  PYTHONPATH=src python -m benchmarks.serve_sweep --skip-sweep   # open-loop only
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
-from repro.launch.serve import main
+from repro.core.api import build_oracle
+from repro.ft import inject
+from repro.graph.generators import paper_dataset_analogue
+from repro.launch.serve import main as serve_main
+from repro.serve.daemon import DaemonConfig
+from repro.serve.openloop import run_open_loop
 
-DEFAULTS = [
-    "--dataset", "citeseer",
-    "--scale", "0.02",
-    "--n-queries", "100000",
-    "--backend", "all",
-    "--json-out", "BENCH_serve.json",
-]
+# the faulted row's fault plan: stalls long enough to overflow the bounded
+# queue at the offered rate (so sheds MUST appear), then a consecutive
+# failure run long enough to trip the breaker
+STALL_OCCURRENCES = list(range(2, 11))
+STALL_SECONDS = 0.06
+FAIL_OCCURRENCES = [12, 13, 14]
+
+
+def open_loop_rows(args) -> dict:
+    g = paper_dataset_analogue(args.dataset, scale=args.scale)
+    co = build_oracle(g)
+    base = dict(rate_arrivals_per_s=args.rate, arrival_batch=args.arrival_batch,
+                duration_s=args.duration, deadline_ms=args.deadline_ms,
+                seed=args.seed)
+    print("open-loop: clean run")
+    clean = run_open_loop(co, g, **base)
+    print(f"  sustained {clean['sustained_qps']} qps, shed_rate "
+          f"{clean['shed_rate']}, p99 {clean['p99_ms']}ms")
+    print("open-loop: device-faulted run (stalls + failures, bounded queue)")
+    plan = inject.Injector(
+        {"serve.device_dispatch": FAIL_OCCURRENCES},
+        latency={"serve.device_dispatch": (STALL_OCCURRENCES, STALL_SECONDS)})
+    cfg = DaemonConfig(deadline_ms=args.deadline_ms,
+                       queue_limit=args.faulted_queue_limit)
+    faulted = run_open_loop(co, g, **base, config=cfg, fault_plan=plan)
+    print(f"  sustained {faulted['sustained_qps']} qps, shed_rate "
+          f"{faulted['shed_rate']}, p99 {faulted['p99_ms']}ms, breaker trips "
+          f"{faulted['breaker']['trips']}, degradation {faulted['degradation']}")
+    return {"clean": clean, "device_faulted": faulted}
+
+
+def ci_smoke(json_out: str = "BENCH_serve_ci.json", out=print) -> dict:
+    """Few-second open-loop daemon smoke for the CI tier: a Poisson run
+    with injected device stalls + hard failures over a tight queue bound,
+    plus a short clean run.  Writes ``json_out`` in the BENCH_serve schema
+    so ``check_monotone(serve_fresh_path=...)`` gates it: sheds must appear,
+    the ladder must fire, p99 of admitted queries must hold the deadline,
+    and zero wrong answers."""
+    from repro.graph.generators import random_dag
+
+    g = random_dag(2000, 6000, seed=0)
+    co = build_oracle(g)
+    base = dict(rate_arrivals_per_s=300.0, arrival_batch=32,
+                deadline_ms=150.0, seed=0, n_truth=150)
+    out("serve smoke: clean open-loop run")
+    clean = run_open_loop(co, g, duration_s=1.0, **base)
+    out(f"serve_smoke_clean,{clean['sustained_qps']},"
+        f"shed={clean['shed_rate']} p99={clean['p99_ms']}ms")
+    out("serve smoke: device-faulted open-loop run")
+    plan = inject.Injector(
+        {"serve.device_dispatch": FAIL_OCCURRENCES},
+        latency={"serve.device_dispatch": (STALL_OCCURRENCES, STALL_SECONDS)})
+    faulted = run_open_loop(
+        co, g, duration_s=1.5,
+        config=DaemonConfig(deadline_ms=150.0, queue_limit=256),
+        fault_plan=plan, **base)
+    out(f"serve_smoke_faulted,{faulted['sustained_qps']},"
+        f"shed={faulted['shed_rate']} p99={faulted['p99_ms']}ms "
+        f"trips={faulted['breaker']['trips']} "
+        f"degradation={faulted['degradation']}")
+    payload = {
+        "dataset": "random_dag_smoke", "n": g.n, "m": g.m, "mode": "ci_smoke",
+        "open_loop": {"clean": clean, "device_faulted": faulted},
+    }
+    with open(json_out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    out(f"# wrote {json_out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="citeseer")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--n-queries", type=int, default=100_000)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--skip-sweep", action="store_true",
+                    help="only refresh the open_loop section")
+    ap.add_argument("--skip-open-loop", action="store_true",
+                    help="only refresh the backends section")
+    # open-loop knobs
+    ap.add_argument("--rate", type=float, default=250.0,
+                    help="Poisson arrivals/sec")
+    ap.add_argument("--arrival-batch", type=int, default=64)
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--deadline-ms", type=float, default=150.0)
+    ap.add_argument("--faulted-queue-limit", type=int, default=768,
+                    help="queue bound for the faulted row; small enough that "
+                         "an injected stall overflows it at the offered rate")
+    args = ap.parse_args()
+
+    if not args.skip_sweep:
+        # phase 1 through the serving driver's sweep mode (it preserves an
+        # existing open_loop section when rewriting the JSON)
+        sys.argv = [
+            "serve_sweep", "--dataset", args.dataset, "--scale", str(args.scale),
+            "--n-queries", str(args.n_queries), "--batch", str(args.batch),
+            "--seed", str(args.seed), "--backend", "all",
+            "--json-out", args.out,
+        ]
+        serve_main()
+
+    if not args.skip_open_loop:
+        rows = open_loop_rows(args)
+        try:
+            with open(args.out) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+        data["open_loop"] = rows
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        print(f"wrote open_loop rows -> {args.out}")
+        bad = rows["clean"]["sample_errors"] + rows["device_faulted"]["sample_errors"]
+        if bad:
+            raise SystemExit(f"open-loop rows recorded {bad} wrong answers")
+
 
 if __name__ == "__main__":
-    seen = set(a for a in sys.argv[1:] if a.startswith("--"))
-    extra = []
-    for flag, val in zip(DEFAULTS[::2], DEFAULTS[1::2]):
-        if flag not in seen:
-            extra += [flag, val]
-    sys.argv += extra
     main()

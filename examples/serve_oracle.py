@@ -3,15 +3,30 @@ this is the paper-kind end-to-end example): build the Distribution-Labeling
 index on a dataset analogue and serve 100k batched requests through the
 QueryEngine with correctness checks and throughput reporting.
 
+The default run keeps an index snapshot under ``./oracle_snapshot``: the
+first invocation builds and saves it, every later invocation cold-starts
+through ``persist.load_oracle`` (checksum-verified) instead of rebuilding —
+delete the directory to force a fresh build.
+
   PYTHONPATH=src python examples/serve_oracle.py
   PYTHONPATH=src python examples/serve_oracle.py --dataset cit-Patents --scale 0.01
   PYTHONPATH=src python examples/serve_oracle.py --backend all   # sweep backends
+  PYTHONPATH=src python examples/serve_oracle.py --mode daemon --rate 300 \
+      --duration 3            # open-loop serving daemon (admission control,
+                              # deadline shedding, circuit breaker)
 """
 import sys
 
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    if len(sys.argv) == 1:
-        sys.argv += ["--dataset", "citeseer", "--scale", "0.02", "--n-queries", "100000"]
+    args = sys.argv[1:]
+    if not any(a.startswith("--dataset") for a in args):
+        sys.argv += ["--dataset", "citeseer", "--scale", "0.02"]
+    if not any(a.startswith("--n-queries") for a in args):
+        sys.argv += ["--n-queries", "100000"]
+    if not any(a.startswith(("--snapshot-dir", "--state-dir")) for a in args):
+        # cold-start from the saved snapshot when it exists; build + save it
+        # on the first run
+        sys.argv += ["--snapshot-dir", "oracle_snapshot"]
     main()

@@ -4,7 +4,7 @@ Two construction algorithms (Hierarchical-Labeling, Distribution-Labeling),
 the oracle container, the batched/distributed query engine, and every
 baseline the paper compares against.
 """
-from repro.core.api import CondensedOracle, build_oracle
+from repro.core.api import CondensedOracle, build_oracle, oracle_from_snapshot
 from repro.core.oracle import ReachabilityOracle, finalize_labels
 from repro.core.distribution import distribution_labeling
 from repro.core.distribution_jax import distribution_labeling_jax
@@ -18,6 +18,7 @@ __all__ = [
     "select_backend",
     "CondensedOracle",
     "build_oracle",
+    "oracle_from_snapshot",
     "ReachabilityOracle",
     "finalize_labels",
     "distribution_labeling",

@@ -47,14 +47,18 @@ class CondensedOracle:
     def query(self, u: int, v: int) -> bool:
         return self.engine.query(int(u), int(v))
 
-    def serve(self, queries: np.ndarray, backend: Optional[str] = None) -> np.ndarray:
+    def serve(self, queries: np.ndarray, backend: Optional[str] = None,
+              deadline: Optional[float] = None) -> np.ndarray:
         """Batched engine path. queries: int[B, 2] original ids -> bool[B].
 
         The original->condensation mapping happens inside the engine through
         its ``comp_source`` hook (reading this oracle's current comp array),
         so the same-SCC short-circuit can never act on a stale cached copy
-        when the condensation is maintained dynamically."""
-        return self.engine.query_batch(np.asarray(queries), backend=backend)
+        when the condensation is maintained dynamically.  ``deadline`` is
+        the daemon's absolute latency budget (see
+        ``QueryEngine.query_batch``)."""
+        return self.engine.query_batch(np.asarray(queries), backend=backend,
+                                       deadline=deadline)
 
 
 def build_oracle(
@@ -87,4 +91,51 @@ def build_oracle(
     # queries reach the engine in original ids; the engine reads the comp
     # array through the oracle at call time (never a private cached copy)
     engine.comp_source = lambda: co.comp
+    return co
+
+
+def oracle_from_snapshot(
+    g: CSRGraph,
+    path: str,
+    mode: Literal["strict", "quarantine"] = "strict",
+    backend: str = "auto",
+    mesh=None,
+    bucketing: bool = True,
+) -> CondensedOracle:
+    """Cold-start serving: wire a persisted label snapshot to ``g``'s
+    condensation instead of rebuilding the index.
+
+    ``mode="strict"`` raises ``persist.CorruptSnapshotError`` on any
+    checksum mismatch; ``mode="quarantine"`` loads anyway, zeroes the
+    corrupt row blocks, and arms the engine's quarantine masks so queries
+    touching them degrade to exact online search over the condensation DAG
+    (throughput cost, never a wrong verdict).
+
+    The caller vouches that ``path`` was saved from THIS graph's
+    condensation (``save_oracle(path, co.oracle)``); a snapshot of a
+    different graph fails the cheap shape check here and answers garbage
+    past it — persist snapshots are content-checksummed, not graph-keyed.
+    """
+    from repro.persist import load_oracle
+
+    if mode not in ("strict", "quarantine"):
+        raise ValueError(f"mode must be strict|quarantine, got {mode!r}")
+    dag, comp = condense_to_dag(g)
+    report = None
+    if mode == "strict":
+        oracle = load_oracle(path, strict=True)
+    else:
+        oracle, report = load_oracle(path, strict=False)
+    if oracle.n != dag.n:
+        raise ValueError(
+            f"snapshot at {path} indexes {oracle.n} vertices but the "
+            f"graph's condensation has {dag.n} — wrong snapshot for this graph")
+    engine = QueryEngine(
+        oracle, backend=backend, level=topo_levels(dag), mesh=mesh,
+        bucketing=bucketing, fallback_graph=dag,
+    )
+    co = CondensedOracle(oracle=oracle, comp=comp, engine=engine)
+    engine.comp_source = lambda: co.comp
+    if report is not None and not report.clean:
+        engine.set_quarantine(report.quarantine_out, report.quarantine_in)
     return co

@@ -364,11 +364,16 @@ class DynamicOracle:
         return bool(ep.query_batch(np.array([[u, v]], dtype=np.int64))[0])
 
     def serve(self, queries: np.ndarray, backend: Optional[str] = None,
-              epoch: Optional[int] = None) -> np.ndarray:
+              epoch: Optional[int] = None,
+              deadline: Optional[float] = None) -> np.ndarray:
         """Batched queries in ORIGINAL vertex ids.
 
         ``epoch=None`` (or the current epoch) runs the full QueryEngine
-        path; an older pinned epoch answers from its frozen snapshot."""
+        path; an older pinned epoch answers from its frozen snapshot.
+        ``deadline`` is the daemon's absolute latency budget (see
+        ``QueryEngine.query_batch``; pinned-epoch snapshots ignore it — the
+        snapshot path has no retrace risk to dodge)."""
         if epoch is None or epoch == self._epoch:
-            return self.engine.query_batch(np.asarray(queries), backend=backend)
+            return self.engine.query_batch(np.asarray(queries), backend=backend,
+                                           deadline=deadline)
         return self.snapshot(epoch).query_batch(np.asarray(queries))

@@ -34,6 +34,16 @@ reproducible crash point" without hand-picking indices.  Production code
 calls ``fire`` unconditionally; with no active injector it is a counter
 bump and nothing more.
 
+Faults come in two flavors:
+
+  * **hard failures** (``rules``) raise ``SimulatedFailure`` at the chosen
+    occurrence — the crash/outage case,
+  * **latency stalls** (``latency``) sleep at the chosen occurrences instead
+    of raising — the slow-device / slow-publish case the serving daemon's
+    latency-SLO circuit breaker and deadline shedding exist for.  A stalled
+    call still runs; only its wall time changes, so stalls compose with the
+    failure rules (a site can stall at one occurrence and fail at another).
+
 ``flip_bit`` is the load-time corruption primitive: one deterministic bit
 flip in a file on disk, for testing that checksummed loads fail loudly.
 """
@@ -41,7 +51,8 @@ from __future__ import annotations
 
 import contextlib
 import os
-from typing import Dict, Iterable, List, Optional, Union
+import time
+from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -56,26 +67,45 @@ class SimulatedFailure(RuntimeError):
 Rule = Union[int, Iterable[int]]
 
 
+def _as_set(at: Rule) -> frozenset:
+    return frozenset([at]) if isinstance(at, (int, np.integer)) else frozenset(at)
+
+
 class Injector:
     """Deterministic injection plan: site -> occurrence index(es) that fail.
 
     ``rules`` maps a site name to the 0-based occurrence index at which
     ``fire(site)`` raises ``SimulatedFailure`` (or an iterable of such
-    indexes).  Occurrence counts live on the injector, so one plan can be
-    inspected after the run (``counts``) and a fresh plan replays
-    identically."""
+    indexes).  ``latency`` maps a site to ``(occurrences, seconds)``: those
+    occurrences SLEEP for ``seconds`` instead of raising — deterministic
+    slow-path injection for deadline/SLO testing.  Occurrence counts live on
+    the injector, so one plan can be inspected after the run (``counts``)
+    and a fresh plan replays identically.  One occurrence counter per site
+    feeds both rule kinds, so a plan addresses "stall the 2nd dispatch,
+    kill the 5th" without double counting."""
 
-    def __init__(self, rules: Dict[str, Rule]):
+    def __init__(self, rules: Optional[Dict[str, Rule]] = None,
+                 latency: Optional[Dict[str, Tuple[Rule, float]]] = None):
         self.rules: Dict[str, frozenset] = {
-            site: frozenset([at]) if isinstance(at, (int, np.integer)) else frozenset(at)
-            for site, at in rules.items()
+            site: _as_set(at) for site, at in (rules or {}).items()
+        }
+        self.latency: Dict[str, Tuple[frozenset, float]] = {
+            site: (_as_set(at), float(seconds))
+            for site, (at, seconds) in (latency or {}).items()
         }
         self.counts: Dict[str, int] = {}
         self.fired: List[str] = []
+        self.stalled: List[str] = []
 
     def fire(self, site: str, **info) -> None:
         idx = self.counts.get(site, 0)
         self.counts[site] = idx + 1
+        lat = self.latency.get(site)
+        if lat is not None and idx in lat[0]:
+            # stall BEFORE the failure check: a site can be both slow and
+            # then fail at a later occurrence, mirroring a degrading device
+            self.stalled.append(f"{site}[{idx}]")
+            time.sleep(lat[1])
         if idx in self.rules.get(site, ()):
             detail = " ".join(f"{k}={v}" for k, v in sorted(info.items()))
             self.fired.append(site)

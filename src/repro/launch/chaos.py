@@ -147,11 +147,107 @@ def scenario_dynamic(seed: int) -> bool:
     return same
 
 
+def scenario_daemon(seed: int) -> bool:
+    """Kill the serving daemon mid-serve over a durable oracle (with a WAL
+    tail acknowledged but unpublished), restart, recover snapshot+WAL, and
+    drain cleanly — recovered serving state must be byte-deterministic and
+    agree with a never-crashed reference oracle."""
+    import asyncio
+
+    from repro.serve.daemon import DaemonConfig, ServeDaemon, ShedError
+
+    g = random_dag(250, 900, seed=seed)
+    rng = np.random.default_rng(seed)
+
+    def rand_batch(k: int = 40) -> UpdateBatch:
+        ups = [(bool(rng.integers(0, 2)), int(rng.integers(0, g.n)),
+                int(rng.integers(0, g.n))) for _ in range(k)]
+        return UpdateBatch.of(
+            inserts=[(u, v) for ins, u, v in ups if ins and u != v],
+            deletes=[(u, v) for ins, u, v in ups if not ins and u != v])
+
+    b_published, b_tail = rand_batch(), rand_batch()
+    q_ref = rng.integers(0, g.n, size=(1200, 2)).astype(np.int32)
+    report: dict = {}
+
+    with tempfile.TemporaryDirectory() as d:
+        dur = DurableDynamicOracle(g, state_dir=d)
+        dur.apply(b_published)
+        dur.publish()
+
+        async def crash_phase() -> None:
+            cfg = DaemonConfig(deadline_ms=1000.0, batch_window_ms=1.0,
+                               backend="dense")
+            daemon = ServeDaemon(dur, cfg)
+            await daemon.start()
+            ans_a = await daemon.submit(
+                rng.integers(0, g.n, size=(64, 2)).astype(np.int32))
+            dur.apply(b_tail)   # WAL-acknowledged, never published: crash tail
+            killed = 0
+
+            async def doomed() -> None:
+                nonlocal killed
+                try:
+                    await daemon.submit(
+                        rng.integers(0, g.n, size=(32, 2)).astype(np.int32))
+                except ShedError as e:
+                    killed += e.reason == "killed"
+
+            # stall the next device dispatches so the kill lands mid-flight
+            plan = inject.Injector(
+                latency={"serve.device_dispatch": ([0, 1, 2], 0.3)})
+            with inject.active(plan):
+                tasks = [asyncio.create_task(doomed()) for _ in range(4)]
+                await asyncio.sleep(0.08)
+                await daemon.kill()
+                await asyncio.gather(*tasks)
+            report.update(answered=int(ans_a.shape[0]), killed=killed,
+                          killed_state=daemon.state)
+
+        asyncio.run(crash_phase())
+        del dur   # crash: only the state dir survives
+
+        rec = DurableDynamicOracle.recover(d)
+        rec2 = DurableDynamicOracle.recover(d)
+        report["recovery_deterministic"] = _fields_equal(
+            rec._base_oracle, rec2._base_oracle)
+        ref = DynamicOracle(g)
+        ref.apply(b_published)
+        ref.publish()
+        ref.apply(b_tail)
+        ref.publish()
+        report["rebuild_agreement"] = bool(
+            (rec.serve(q_ref) == ref.serve(q_ref)).all())
+
+        async def drain_phase() -> None:
+            daemon = ServeDaemon(rec, DaemonConfig(deadline_ms=1000.0))
+            await daemon.start()
+            parts = await asyncio.gather(
+                *(daemon.submit(q_ref[i * 200:(i + 1) * 200])
+                  for i in range(6)))
+            stats = await daemon.drain()
+            report["drained_clean"] = (daemon.state == "stopped"
+                                       and stats["answered"] == stats["admitted"])
+            report["recovered_serving_match"] = bool(
+                (np.concatenate(parts) == ref.serve(q_ref)).all())
+
+        asyncio.run(drain_phase())
+
+    ok = (report["answered"] > 0 and report["killed"] > 0
+          and report["killed_state"] == "killed"
+          and report["recovery_deterministic"] and report["rebuild_agreement"]
+          and report["drained_clean"] and report["recovered_serving_match"])
+    print(f"  {report}")
+    print(f"daemon kill-recover-drain: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
 SCENARIOS = {
     "build": scenario_build,
     "corrupt": scenario_corrupt,
     "serve": scenario_serve,
     "dynamic": scenario_dynamic,
+    "daemon": scenario_daemon,
 }
 
 
@@ -162,13 +258,23 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     names = list(SCENARIOS) if args.scenario == "all" else [args.scenario]
-    ok = True
+    # every scenario runs even when an earlier one fails or raises — a crash
+    # in one must not mask regressions in the rest, and the exit code must
+    # report ALL failures, not just the first
+    results: dict = {}
     for name in names:
         print(f"=== {name} ===")
-        ok &= SCENARIOS[name](args.seed)
-    if not ok:
+        try:
+            results[name] = bool(SCENARIOS[name](args.seed))
+        except Exception as e:   # noqa: BLE001 - the driver is the backstop
+            print(f"{name}: FAIL (unhandled {type(e).__name__}: {e})")
+            results[name] = False
+    failed = [n for n, ok in results.items() if not ok]
+    if failed:
+        print(f"chaos scenarios FAILED: {', '.join(failed)} "
+              f"({len(failed)}/{len(results)})")
         sys.exit(1)
-    print("all chaos scenarios passed")
+    print(f"all {len(results)} chaos scenarios passed")
 
 
 if __name__ == "__main__":

@@ -1,39 +1,95 @@
-"""Oracle serving driver: build the index, serve batched query streams
-through the QueryEngine.
+"""Oracle serving driver: closed-loop backend sweeps and the open-loop
+serving daemon, over a built, snapshot-loaded, or WAL-recovered index.
+
+Closed-loop sweep (the BENCH_serve.json backends section):
 
   PYTHONPATH=src python -m repro.launch.serve --dataset citeseer --scale 0.02 \
       --n-queries 100000 --batch 4096 --backend dense
 
-Builds Distribution-Labeling on the (synthetic analogue) dataset, then runs
-the engine's batched path (prefilters + length-bucketed micro-batching +
-the chosen intersection backend) and reports throughput + correctness
-against ground truth on a sample. ``--backend all`` sweeps every
-single-host backend.
+Open-loop daemon (admission control + deadline shedding + circuit breaker;
+SIGTERM drains gracefully):
+
+  PYTHONPATH=src python -m repro.launch.serve --mode daemon --rate 400 \
+      --arrival-batch 64 --duration 3 --deadline-ms 150
+
+Lifecycle: ``--snapshot-dir`` cold-starts from a ``persist.load_oracle``
+snapshot when one exists (``--load-mode quarantine`` arms the degradation
+ladder instead of refusing a corrupt snapshot) and saves one after a fresh
+build; ``--state-dir`` serves a ``DurableDynamicOracle``, recovering
+snapshot + WAL when the directory is non-empty.  ``--inject-device-failure``
+/ ``--inject-device-latency`` aim deterministic faults at the dispatch path
+so overload behavior is reproducible, not anecdotal.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
+import os
+import signal
 import time
 
 import numpy as np
 
-from repro.core.api import build_oracle
+from repro.core.api import build_oracle, oracle_from_snapshot
 from repro.ft import inject
+from repro.serve.daemon import DaemonConfig, ServeDaemon
 from repro.serve.engine import select_backend
+from repro.serve.openloop import run_open_loop
 from repro.graph.generators import paper_dataset_analogue, random_dag
 from repro.graph.reach import reachable_set
 
 HOST_BACKENDS = ("host", "dense", "kernel")
 
 
-def build(args):
+def make_graph(args):
     g = (
         paper_dataset_analogue(args.dataset, scale=args.scale)
         if args.dataset != "random"
         else random_dag(20000, 50000, seed=args.seed)
     )
     print(f"graph: n={g.n} m={g.m}")
+    return g
+
+
+def build_target(args, g):
+    """Resolve the serving target through the lifecycle ladder:
+    durable-dynamic recovery > snapshot cold start > fresh build."""
+    if args.state_dir:
+        from repro.dynamic import DurableDynamicOracle
+
+        has_state = os.path.isdir(args.state_dir) and any(
+            name.startswith("snap_") for name in os.listdir(args.state_dir))
+        if has_state:
+            t0 = time.perf_counter()
+            dyn = DurableDynamicOracle.recover(args.state_dir)
+            print(f"recovered durable oracle from {args.state_dir} in "
+                  f"{time.perf_counter() - t0:.2f}s (epoch={dyn.epoch}, "
+                  f"wal records replayed={dyn.recovered_records})")
+        else:
+            dyn = DurableDynamicOracle(g, state_dir=args.state_dir)
+            print(f"durable oracle initialized at {args.state_dir}")
+        return dyn
+    if args.snapshot_dir and os.path.isdir(args.snapshot_dir):
+        t0 = time.perf_counter()
+        co = oracle_from_snapshot(g, args.snapshot_dir, mode=args.load_mode)
+        nq = co.engine.stats()["n_quarantined"]
+        print(f"cold start from snapshot {args.snapshot_dir} in "
+              f"{time.perf_counter() - t0:.2f}s"
+              + (f" ({nq} rows quarantined)" if nq else ""))
+        return co
+    co = build(args, g)
+    if args.snapshot_dir:
+        from repro.persist import save_oracle
+
+        save_oracle(args.snapshot_dir, co.oracle)
+        print(f"saved index snapshot -> {args.snapshot_dir}")
+    return co
+
+
+def build(args, g=None):
+    if g is None:
+        g = make_graph(args)
     ckpt_kwargs = {}
     if args.checkpoint_dir:
         # crash-safe build: wave-granular checkpoints; a re-run with the same
@@ -52,7 +108,7 @@ def build(args):
     if ck is not None:
         print(f"checkpoints: resumed_from={ck['resumed_from']} "
               f"written={ck['written']} -> {args.checkpoint_dir}")
-    return g, oracle
+    return oracle
 
 
 def serve_loop(oracle, queries: np.ndarray, batch: int, backend: str) -> tuple[float, np.ndarray]:
@@ -78,40 +134,20 @@ def check_sample(g, queries: np.ndarray, pred: np.ndarray, n_check: int = 200) -
     return bad
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="citeseer")
-    ap.add_argument("--scale", type=float, default=0.02)
-    ap.add_argument("--n-queries", type=int, default=100_000)
-    ap.add_argument("--batch", type=int, default=4096)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", default="auto",
-                    help="auto|host|dense|kernel, or 'all' to sweep")
-    ap.add_argument("--no-bucketing", action="store_true",
-                    help="disable length-bucketed micro-batching")
-    ap.add_argument("--json-out", default=None,
-                    help="write per-backend M-qps results to this JSON file")
-    ap.add_argument("--checkpoint-dir", default=None,
-                    help="wave-granular build checkpoints; re-running with the "
-                         "same flags resumes from the latest complete one")
-    ap.add_argument("--checkpoint-every", type=int, default=16,
-                    help="schedule boundaries between checkpoints")
-    ap.add_argument("--inject-device-failure", type=int, default=None,
-                    metavar="K",
-                    help="fault-inject the K-th device dispatch of each serve "
-                         "run; queries degrade to the host rung (counted, "
-                         "never a wrong verdict)")
-    args = ap.parse_args()
+# -------------------------------------------------------- closed-loop sweep
 
+
+def run_sweep(args) -> None:
     backends = list(HOST_BACKENDS) if args.backend == "all" else [args.backend]
     for be in backends:
         if be != "auto":
             try:
                 select_backend(be)
             except ValueError as e:
-                ap.error(str(e))
+                raise SystemExit(str(e))
 
-    g, oracle = build(args)
+    g = make_graph(args)
+    oracle = build_target(args, g)
     rng = np.random.default_rng(args.seed)
     queries = rng.integers(0, g.n, size=(args.n_queries, 2)).astype(np.int32)
 
@@ -134,7 +170,7 @@ def main() -> None:
             f"({mqps:.2f} M qps; {dt / args.n_queries * 1e9:.0f} ns/query)  "
             f"prefiltered {stats['n_prefiltered']}/{stats['n_queries']} of last batch"
         )
-        deg = {k: v - deg0[k] for k, v in oracle.engine.degradation.items()}
+        deg = {k: v - deg0.get(k, 0) for k, v in oracle.engine.degradation.items()}
         if any(deg.values()):
             print(f"[{stats['backend']}] degradation: "
                   f"device->host={deg['device_to_host']} "
@@ -165,6 +201,15 @@ def main() -> None:
             "note": "kernel backend runs the Pallas kernel in interpret mode off-TPU",
             "backends": records,
         }
+        # preserve sections other writers own (the open_loop rows)
+        if os.path.exists(args.json_out):
+            try:
+                with open(args.json_out) as f:
+                    prev = json.load(f)
+                if "open_loop" in prev:
+                    payload["open_loop"] = prev["open_loop"]
+            except (json.JSONDecodeError, OSError):
+                pass
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
@@ -172,6 +217,177 @@ def main() -> None:
 
     if failed:
         raise SystemExit(1)
+
+
+# ----------------------------------------------------------- open-loop daemon
+
+
+def _parse_occurrences(spec: str):
+    """'3' -> [3];  '2-5' -> [2,3,4,5];  '1,4' -> [1,4]."""
+    out = []
+    for part in str(spec).split(","):
+        if "-" in part:
+            lo, hi = part.split("-")
+            out.extend(range(int(lo), int(hi) + 1))
+        else:
+            out.append(int(part))
+    return out
+
+
+def fault_plan_from_args(args):
+    """CLI fault flags -> one deterministic inject.Injector (or None)."""
+    rules = {}
+    latency = {}
+    if args.inject_device_failure is not None:
+        rules["serve.device_dispatch"] = _parse_occurrences(
+            args.inject_device_failure)
+    if args.inject_device_latency:
+        occ, ms = args.inject_device_latency.rsplit(":", 1)
+        latency["serve.device_dispatch"] = (
+            _parse_occurrences(occ), float(ms) / 1000.0)
+    if not rules and not latency:
+        return None
+    return inject.Injector(rules, latency=latency)
+
+
+def run_daemon(args) -> None:
+    g = make_graph(args)
+    target = build_target(args, g)
+    cfg = DaemonConfig(
+        batch_window_ms=args.batch_window_ms,
+        max_batch=args.max_batch,
+        queue_limit=args.queue_limit,
+        deadline_ms=args.deadline_ms,
+        backend=None if args.backend in ("auto", "all") else args.backend,
+        breaker_failures=args.breaker_failures,
+        breaker_slo_ms=args.breaker_slo_ms,
+    )
+
+    # SIGTERM/SIGINT -> graceful drain: admission starts shedding
+    # ("draining"), already-admitted requests are served, then the loop
+    # stops.  The handler only flips state; the drain in run_open_loop's
+    # driver does the rest.
+    daemon_box = {}
+
+    def _drain_handler(signum, frame):
+        d: ServeDaemon = daemon_box.get("daemon")
+        if d is not None and d.state == "ready":
+            print(f"signal {signum}: draining (new arrivals shed)")
+            d.state = "draining"
+
+    old_term = signal.signal(signal.SIGTERM, _drain_handler)
+    old_int = signal.signal(signal.SIGINT, _drain_handler)
+
+    # run_open_loop creates the daemon internally; intercept it via a small
+    # subclass hook so the signal handler can reach it
+    orig_init = ServeDaemon.__init__
+
+    def _capturing_init(self, *a, **kw):
+        orig_init(self, *a, **kw)
+        daemon_box["daemon"] = self
+
+    ServeDaemon.__init__ = _capturing_init
+    try:
+        report = run_open_loop(
+            target, g,
+            rate_arrivals_per_s=args.rate,
+            arrival_batch=args.arrival_batch,
+            duration_s=args.duration,
+            deadline_ms=args.deadline_ms,
+            config=cfg,
+            fault_plan=fault_plan_from_args(args),
+            seed=args.seed,
+        )
+    finally:
+        ServeDaemon.__init__ = orig_init
+        signal.signal(signal.SIGTERM, old_term)
+        signal.signal(signal.SIGINT, old_int)
+
+    daemon = daemon_box.get("daemon")
+    health = daemon.health() if daemon is not None else {}
+    print(f"daemon: answered {report['answered']} of {report['submitted']} "
+          f"submitted ({report['sustained_qps']} qps sustained, "
+          f"offered {report['offered_qps']})")
+    print(f"daemon: shed_rate={report['shed_rate']:.3f} {report['shed']}  "
+          f"p50={report['p50_ms']:.1f}ms p99={report['p99_ms']:.1f}ms "
+          f"(deadline {report['deadline_ms']:.0f}ms, "
+          f"within={report['p99_within_deadline']})")
+    print(f"daemon: breaker trips={report['breaker']['trips']} "
+          f"degradation={report['degradation']}  "
+          f"sample_errors={report['sample_errors']}")
+    if args.json_out:
+        payload = {"dataset": args.dataset, "scale": args.scale,
+                   "n": g.n, "m": g.m, "mode": "daemon",
+                   "report": report, "health": health}
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json_out}")
+    if report["sample_errors"]:
+        raise SystemExit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="sweep", choices=["sweep", "daemon"],
+                    help="sweep = closed-loop backend sweep; daemon = "
+                         "open-loop admission-controlled serving")
+    ap.add_argument("--dataset", default="citeseer")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--n-queries", type=int, default=100_000)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto",
+                    help="auto|host|dense|kernel, or 'all' to sweep")
+    ap.add_argument("--no-bucketing", action="store_true",
+                    help="disable length-bucketed micro-batching")
+    ap.add_argument("--json-out", default=None,
+                    help="write results to this JSON file")
+    # lifecycle
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="wave-granular build checkpoints; re-running with the "
+                         "same flags resumes from the latest complete one")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="schedule boundaries between checkpoints")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="cold-start from this persist.save_oracle snapshot "
+                         "when it exists; save one after a fresh build")
+    ap.add_argument("--load-mode", default="strict",
+                    choices=["strict", "quarantine"],
+                    help="strict: refuse a corrupt snapshot; quarantine: "
+                         "serve around corrupt rows via the degradation ladder")
+    ap.add_argument("--state-dir", default=None,
+                    help="serve a DurableDynamicOracle out of this WAL+snapshot "
+                         "dir (recovers when non-empty)")
+    # daemon knobs
+    ap.add_argument("--rate", type=float, default=400.0,
+                    help="daemon mode: Poisson arrival rate (arrivals/sec)")
+    ap.add_argument("--arrival-batch", type=int, default=64,
+                    help="queries per arrival")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="daemon mode: open-loop run seconds")
+    ap.add_argument("--deadline-ms", type=float, default=150.0)
+    ap.add_argument("--queue-limit", type=int, default=8192)
+    ap.add_argument("--max-batch", type=int, default=4096)
+    ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument("--breaker-failures", type=int, default=3)
+    ap.add_argument("--breaker-slo-ms", type=float, default=None)
+    # faults
+    ap.add_argument("--inject-device-failure", default=None, metavar="OCCS",
+                    help="fault the given device-dispatch occurrences "
+                         "('4' / '2-5' / '1,7'); sweep mode takes a single int")
+    ap.add_argument("--inject-device-latency", default=None, metavar="OCCS:MS",
+                    help="daemon mode: stall the given device-dispatch "
+                         "occurrences by MS milliseconds (e.g. '2-6:60')")
+    args = ap.parse_args()
+
+    if args.mode == "daemon":
+        run_daemon(args)
+    else:
+        if args.inject_device_failure is not None:
+            # sweep mode keeps the historical single-occurrence semantics
+            args.inject_device_failure = int(args.inject_device_failure)
+        run_sweep(args)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,11 @@
-"""The oracle serve subsystem: QueryEngine + batching planner + prefilters.
+"""The oracle serve subsystem: QueryEngine + batching planner + prefilters
++ the overload-safe serving daemon (admission control, deadline shedding,
+circuit-broken degradation) and its open-loop workload driver.
 
 Every query path in the repo routes through ``QueryEngine``; future serving
 work (caching, async, new shardings) lands here.
 """
+from repro.serve.daemon import CircuitBreaker, DaemonConfig, ServeDaemon, ShedError
 from repro.serve.engine import (
     BACKENDS,
     QueryEngine,
@@ -12,11 +15,17 @@ from repro.serve.engine import (
     select_backend,
     serve_step,
 )
+from repro.serve.openloop import run_open_loop
 from repro.serve.planner import BatchPlan, TierPlan, plan_batch, tier_widths
 from repro.serve.prefilter import PrefilterResult, apply_prefilters, topo_levels
 
 __all__ = [
     "BACKENDS",
+    "CircuitBreaker",
+    "DaemonConfig",
+    "ServeDaemon",
+    "ShedError",
+    "run_open_loop",
     "QueryEngine",
     "select_backend",
     "serve_step",

@@ -23,6 +23,8 @@ dense otherwise.
 """
 from __future__ import annotations
 
+import copy
+import time
 import warnings
 from functools import partial
 from typing import Optional, Sequence
@@ -152,6 +154,16 @@ def make_hop_sharded_serve_step(mesh, model_axis="model", data_axes=("pod", "dat
 
 # ----------------------------------------------------------------- engine
 
+# every downgrade the ladder can count; stats()/reset_stats() and the
+# per-batch tallies all start from this shape so no consumer ever sees a
+# partially populated counter dict
+_ZERO_DEGRADATION = {
+    "device_to_host": 0,   # device backend failed -> host merge
+    "deadline_to_host": 0, # batch past deadline -> skip device (retrace risk)
+    "searched": 0,         # labels unusable -> exact bidirectional search
+    "quarantined": 0,      # queries that touched quarantined label rows
+}
+
 
 class QueryEngine:
     """The serve subsystem for one ReachabilityOracle.
@@ -238,7 +250,7 @@ class QueryEngine:
         self.quarantine_out: Optional[np.ndarray] = None
         self.quarantine_in: Optional[np.ndarray] = None
         # cumulative downgrade counters (ladder observability)
-        self.degradation = {"device_to_host": 0, "searched": 0, "quarantined": 0}
+        self.degradation = dict(_ZERO_DEGRADATION)
 
     # ---------------------------------------------------------- publishing
 
@@ -269,6 +281,30 @@ class QueryEngine:
         # new labels supersede any previous load-time quarantine
         self.quarantine_out = None
         self.quarantine_in = None
+
+    # ------------------------------------------------------- observability
+
+    def stats(self) -> dict:
+        """Consistent snapshot of the engine's serving state for health
+        endpoints: a deep copy taken in one place, so a reader can never
+        observe counters torn between two batches (the live ``degradation``
+        dict mutates per batch)."""
+        return {
+            "epoch": self.epoch,
+            "backend": self.backend,
+            "widths": list(self.widths),
+            "n_quarantined": int(
+                (0 if self.quarantine_out is None else int(self.quarantine_out.sum()))
+                + (0 if self.quarantine_in is None else int(self.quarantine_in.sum()))),
+            "degradation": dict(self.degradation),
+            "last_batch": copy.deepcopy(self.last_stats),
+        }
+
+    def reset_stats(self) -> None:
+        """Zero the cumulative degradation counters and the last-batch
+        record (e.g. at daemon startup, or between bench runs)."""
+        self.degradation = dict(_ZERO_DEGRADATION)
+        self.last_stats = {}
 
     # ------------------------------------------------- degradation ladder
 
@@ -338,19 +374,29 @@ class QueryEngine:
             return False
         return o.query(u, v)
 
-    def query_batch(self, queries: np.ndarray, backend: Optional[str] = None) -> np.ndarray:
+    def query_batch(self, queries: np.ndarray, backend: Optional[str] = None,
+                    deadline: Optional[float] = None) -> np.ndarray:
         """Answer int[B, 2] queries -> bool[B].
 
         With ``comp_source`` set, queries are original vertex ids and the
         same-SCC short-circuit (the engine's ``u == v`` prefilter after
         mapping) reads the CURRENT condensation — not a cached copy.
+
+        ``deadline`` (absolute ``time.monotonic()`` seconds) is the serving
+        daemon's per-batch latency budget, propagated down here because the
+        engine owns the one genuinely unpredictable step: a device dispatch
+        can retrace (new tile/width shape) and stall for orders of magnitude
+        longer than a warm call.  A batch already past its deadline
+        therefore skips the device attempt and takes the predictable host
+        merge (counted as ``deadline_to_host``).  Deadlines never change
+        verdicts — every rung stays exact.
         """
         queries = self._map_ids(np.asarray(queries))
         queries = np.ascontiguousarray(np.asarray(queries, dtype=np.int32))
         backend = self.backend if backend is None else select_backend(backend, self.mesh)
         o = self.oracle
         out = np.zeros(queries.shape[0], dtype=bool)
-        degraded = {"device_to_host": 0, "searched": 0, "quarantined": 0}
+        degraded = dict(_ZERO_DEGRADATION)
 
         # ladder rung 0 (when needed): queries touching quarantined label
         # rows bypass prefilters TOO — length/level prefilters read the very
@@ -387,6 +433,11 @@ class QueryEngine:
         rest = queries[rest_idx]
 
         if backend == "host":
+            res = self._host_batch(rest)
+        elif deadline is not None and time.monotonic() > deadline:
+            # past budget before the device attempt: retrace risk is the one
+            # unbounded cost left — take the predictable path instead
+            degraded["deadline_to_host"] += int(rest.shape[0])
             res = self._host_batch(rest)
         else:
             try:

@@ -225,6 +225,32 @@ def test_corrupt_label_rows_degrade_to_search_same_verdicts(rng, tmp_path):
         assert eng.query(u, v) == ref.query(u, v)
 
 
+def test_combined_degradation_paths_in_one_batch(rng):
+    """All three ladder rungs fire inside ONE batch — quarantined rows go
+    to exact search, the device dispatch fails and the rest re-serves on
+    the host merge path — across the five graph families, with every
+    verdict still matching the clean host path."""
+    for name, g in _dag_families(rng):
+        co = build_oracle(g)
+        q = rng.integers(0, g.n, size=(800, 2)).astype(np.int32)
+        want = co.engine.query_batch(q, backend="host")
+        qmask = np.zeros(co.oracle.n, dtype=bool)
+        qmask[rng.integers(0, co.oracle.n,
+                           size=max(co.oracle.n // 4, 1))] = True
+        co.engine.set_quarantine(qmask, None)
+        co.engine.reset_stats()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with inject.active(inject.Injector({"serve.device_dispatch": 0})):
+                got = co.engine.query_batch(q, backend="dense")
+        co.engine.set_quarantine(None, None)
+        deg = co.engine.last_stats["degraded"]   # this one batch's counters
+        assert np.array_equal(got, want), name
+        assert deg["quarantined"] > 0, name
+        assert deg["searched"] > 0, name
+        assert deg["device_to_host"] > 0, name
+
+
 def test_quarantine_cleared_by_refresh(rng):
     g = random_dag(80, 240, seed=6)
     oracle = build_distribution_labels(g, impl="wave")
