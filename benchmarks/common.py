@@ -232,6 +232,11 @@ def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
         one-pass scheduler's share of the build must not creep up by more
         than 15 percentage points (an absolute slack — shares are ratios of
         two timings and noisier than the speedup ratio).
+      * when both records carry ``engine.stage_shares`` (the obs layer's
+        per-stage build attribution), no stage's share of total build time
+        may creep by more than 15 points either — the scheduler gate
+        generalized to prune gather / label append / certify / replay /
+        finalize / checkpoint.
     The fresh record's device_engine rows (sparse device wave engine) gate
     unconditionally on byte-identity — that check is deterministic.
     The committed BENCH_serve.json and BENCH_dynamic.json ride along as
@@ -292,6 +297,21 @@ def check_monotone(fresh_path: str, trajectory: dict, tol: float = 0.10,
                 regressions.append(
                     f"{key}: scheduler share regressed {o_sh:.1%} -> {n_sh:.1%} "
                     f"(> 15 points)")
+            # generic stage-attribution gate: any build stage's share of
+            # total build time creeping > 15 points is a perf regression in
+            # that stage even when the end-to-end ratio still passes (the
+            # scheduler-share special case above, generalized).  "sweep" is
+            # excluded: it is the complement of "schedule", so a scheduler
+            # IMPROVEMENT would read as sweep-share creep.  Soft lookups:
+            # committed rows predating stage_shares simply skip the gate.
+            n_st = (new.get("engine") or {}).get("stage_shares") or {}
+            o_st = (old.get("engine") or {}).get("stage_shares") or {}
+            for s_name in sorted(set(n_st) & set(o_st) - {"sweep"}):
+                if n_st[s_name] > o_st[s_name] + 0.15:
+                    regressions.append(
+                        f"{key}: build stage '{s_name}' share crept "
+                        f"{o_st[s_name]:.1%} -> {n_st[s_name]:.1%} "
+                        f"(> 15 points)")
     for key, row in fresh_all.get("device_engine", {}).items():
         if not row.get("labels_match_reference", False):
             regressions.append(

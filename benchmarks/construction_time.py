@@ -124,6 +124,10 @@ def _engine_vs_reference(out=print, compare=None) -> dict:
                 "labels_per_sec": round(o_eng.total_label_size / t_eng),
                 "schedule_seconds": stats.get("schedule_seconds"),
                 "sweep_seconds": stats.get("sweep_seconds"),
+                # per-stage attribution of the LAST rep (fractions of total
+                # build time; within-sweep stages overlap "sweep") — the
+                # check-monotone stage-share creep gate reads these
+                "stage_shares": stats.get("stage_shares"),
             },
             "speedup": round(speedup, 3),
             "labels_match_reference": bool(match),

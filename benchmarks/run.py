@@ -23,7 +23,7 @@ def main() -> None:
         "--only",
         default=None,
         choices=[None, "query_time", "construction_time", "index_size",
-                 "kernel_bench", "serve_smoke"],
+                 "kernel_bench", "serve_smoke", "obs_overhead"],
     )
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: construction section only, tiny dataset")
@@ -54,6 +54,7 @@ def main() -> None:
         construction_time,
         index_size,
         kernel_bench,
+        obs_overhead,
         query_time,
         serve_sweep,
     )
@@ -72,6 +73,8 @@ def main() -> None:
         "query_time": query_time.run,
         "serve_smoke": lambda *, out: serve_sweep.ci_smoke(
             json_out=serve_ci_json, out=out),
+        "obs_overhead": lambda *, out: obs_overhead.run(
+            out=out, quick=args.quick, ci=args.ci),
     }
     if (args.quick or args.ci) and not args.only:
         # the CI tier adds the open-loop daemon smoke (faulted + clean) so
@@ -84,13 +87,18 @@ def main() -> None:
     flushing = lambda s: print(s, flush=True)
     t0 = time.perf_counter()
     ran = set()
+    gate_failures = []
     for name, fn in sections.items():
         if args.only and name != args.only:
             continue
         print(f"\n## section: {name}", flush=True)
-        fn(out=flushing)
+        result = fn(out=flushing)
+        if isinstance(result, dict) and result.get("gate_failed"):
+            gate_failures.append(name)
         ran.add(name)
     print(f"\n## total_bench_seconds,{time.perf_counter() - t0:.1f},", flush=True)
+    if gate_failures:
+        raise SystemExit(f"section gate failed: {', '.join(gate_failures)}")
 
     if args.check_monotone:
         if "construction_time" not in ran:

@@ -85,6 +85,8 @@ import numpy as np
 
 from repro.build import bitset
 from repro.ft import inject
+from repro.obs import metrics, trace
+from repro.obs.state import ON
 # cone_resume_sweep is the engine's cone-scoped construction entry point
 # (repro.dynamic repairs labels through it); it lives in traverse.py beside
 # the sibling scalar sweep it generalizes
@@ -112,6 +114,20 @@ _AUTO_DENSE_REACH = 0.02
 # the optimistic sweep (prune gather, certify, cleanup) runs on flat
 # single-word arrays
 _SPEC_CAP = 64
+
+# Registry families for construction progress.  Stage attribution also lands
+# in ``build_stats["stages"]`` / ``["stage_shares"]`` (the BENCH-gated view);
+# the registry mirror exists so a long-running build is observable live
+# through the same snapshot surface as the daemon.
+_M_WAVES = metrics.counter(
+    "build_waves_total", "completed schedule boundaries, by kind",
+    labelnames=("kind",))
+_WAVES_EXACT = _M_WAVES.labels(kind="exact")
+_WAVES_SPEC = _M_WAVES.labels(kind="speculative")
+_WAVES_BAILOUT = _M_WAVES.labels(kind="scalar_bailout")
+_M_STAGE_SECONDS = metrics.counter(
+    "build_stage_seconds_total", "cumulative construction seconds by stage",
+    labelnames=("stage",))
 
 
 def _sampled_reach_density(g: CSRGraph, samples: int = 12, seed: int = 0) -> float:
@@ -235,29 +251,34 @@ def build_distribution_labels(
                 f"construction checkpointing is host-batched only; "
                 f"impl={impl!r} builds without checkpoints", stacklevel=2)
     spec_stats: dict = {}
+    stage_seconds: dict = {}
+    sweep_sp = (trace.span("build.sweep", cat="build",
+                           args={"impl": impl, "n": g.n})
+                if ON.enabled else trace.NOOP_SPAN)
     t0 = time.perf_counter()
-    if impl in ("reference", "ref"):
-        oracle = _build_reference(g, order)
-        impl = "reference"
-    elif impl in ("wave", "bitset"):
-        oracle = _build_wave(g, order, max_wave=max_wave, waves=waves,
-                             ckpt=ckpt, fingerprint=fingerprint,
-                             restored=restored)
-        impl = "wave"
-    elif impl == "speculative":
-        oracle = _build_speculative(
-            g, order, max_wave=max_wave, schedule=spec_schedule,
-            stats_out=spec_stats, ckpt=ckpt, fingerprint=fingerprint,
-            restored=restored,
-        )
-    elif impl == "device":
-        from repro.build.engine_jax import distribution_labeling_device
+    with sweep_sp:
+        if impl in ("reference", "ref"):
+            oracle = _build_reference(g, order)
+            impl = "reference"
+        elif impl in ("wave", "bitset"):
+            oracle = _build_wave(g, order, max_wave=max_wave, waves=waves,
+                                 ckpt=ckpt, fingerprint=fingerprint,
+                                 restored=restored, stage_out=stage_seconds)
+            impl = "wave"
+        elif impl == "speculative":
+            oracle = _build_speculative(
+                g, order, max_wave=max_wave, schedule=spec_schedule,
+                stats_out=spec_stats, ckpt=ckpt, fingerprint=fingerprint,
+                restored=restored, stage_out=stage_seconds,
+            )
+        elif impl == "device":
+            from repro.build.engine_jax import distribution_labeling_device
 
-        oracle = distribution_labeling_device(
-            g, order=order, waves=waves, **device_kwargs
-        )
-    else:
-        raise ValueError(f"unknown construction impl {impl!r}")
+            oracle = distribution_labeling_device(
+                g, order=order, waves=waves, **device_kwargs
+            )
+        else:
+            raise ValueError(f"unknown construction impl {impl!r}")
     t_sweep = time.perf_counter() - t0
     if impl == "speculative":
         waves_n = int(spec_schedule.lengths.shape[0])
@@ -274,6 +295,24 @@ def build_distribution_labels(
         "sweep_seconds": round(t_sweep, 4),
         "n_waves": waves_n,
     }
+    # Per-stage attribution: "schedule" and "sweep" partition the build;
+    # the remaining stages are WITHIN-sweep shares (prune gather, label
+    # append, finalize, certify/replay, checkpoint writes), so shares are
+    # fractions of total build time and need not sum to 1.  BENCH rows
+    # carry stage_shares so ``check_monotone`` can gate attribution creep.
+    stages = dict(stage_seconds)
+    if ckpt is not None:
+        stages["checkpoint"] = ckpt.save_seconds
+    stages["schedule"] = t_sched
+    stages["sweep"] = t_sweep
+    total = t_sched + t_sweep
+    stats["stages"] = {k: round(float(v), 4) for k, v in sorted(stages.items())}
+    stats["stage_shares"] = {
+        k: (round(float(v) / total, 4) if total > 0 else 0.0)
+        for k, v in sorted(stages.items())
+    }
+    for k, v in stages.items():
+        _M_STAGE_SECONDS.labels(stage=k).inc(float(v))
     if spec_stats:
         stats["speculation"] = spec_stats
     if ckpt is not None or restored is not None:
@@ -365,11 +404,30 @@ class _LabelStore:
             self.mat = np.full((n, _PAD_MULTIPLE), null, dtype=np.int32)
         self.lens = np.zeros(n, dtype=np.int32)
         self.deep: Dict[int, List[int]] = {}
+        # within-sweep stage attribution: the builders surface these as
+        # ``build_stats["stages"]`` so BENCH can gate attribution drift
+        # (prune gather is the measured ~2/3 sweep hot spot)
+        self.stage_seconds: Dict[str, float] = {
+            "prune_gather": 0.0, "label_append": 0.0, "finalize": 0.0}
+
+    def _timed(self, stage: str, fn, *args):
+        """Run a store hot spot under stage attribution (no-op clock when
+        obs is disabled — the store methods themselves stay unchanged)."""
+        if not ON.enabled:
+            return fn(*args)
+        t0 = time.perf_counter()
+        try:
+            return fn(*args)
+        finally:
+            self.stage_seconds[stage] += time.perf_counter() - t0
 
     # -- writes ---------------------------------------------------------
 
     def append(self, verts: np.ndarray, counts: np.ndarray, vals: np.ndarray) -> None:
         """Append ``counts[k]`` rank values to row verts[k] (vals row-major)."""
+        return self._timed("label_append", self._append, verts, counts, vals)
+
+    def _append(self, verts: np.ndarray, counts: np.ndarray, vals: np.ndarray) -> None:
         row_lens = self.lens[verts].astype(np.int64)
         new_lens = row_lens + counts
         need = int(new_lens.max())
@@ -498,6 +556,9 @@ class _LabelStore:
     def ragged_entries(self, verts: np.ndarray):
         """(values int32[t], lens int64[k]) — concatenated label entries of
         ``verts`` in order, deep tails included."""
+        return self._timed("prune_gather", self._ragged_entries, verts)
+
+    def _ragged_entries(self, verts: np.ndarray):
         lens = self.lens[verts].astype(np.int64)
         head_lens = np.minimum(lens, self.DEEP_CAP) if self.deep else lens
         total = int(head_lens.sum())
@@ -522,6 +583,9 @@ class _LabelStore:
         rows, point tail columns at the hop table's always-zero last row,
         one flat take + one axis reduce, no ragged index arithmetic.  Wider
         masks gather raggedly so cost tracks actual label ints."""
+        return self._timed("prune_gather", self._pruned_or, frontier, hop_mask)
+
+    def _pruned_or(self, frontier: np.ndarray, hop_mask: np.ndarray) -> np.ndarray:
         lens = self.lens[frontier].astype(np.int64)
         out = np.zeros((frontier.shape[0], hop_mask.shape[1]), dtype=np.uint64)
         if frontier.shape[0] == 0:
@@ -563,6 +627,9 @@ class _LabelStore:
         table?  The single-member analogue of ``pruned_or`` (replay's prune
         test), same rectangular layout: tail slots index mark's always-False
         last entry."""
+        return self._timed("prune_gather", self._pruned_any, frontier, mark)
+
+    def _pruned_any(self, frontier: np.ndarray, mark: np.ndarray) -> np.ndarray:
         lens = self.lens[frontier].astype(np.int64)
         out = np.zeros(frontier.shape[0], dtype=bool)
         if frontier.shape[0] == 0:
@@ -600,6 +667,9 @@ class _LabelStore:
         (multiple of 8, min 8, INVALID-padded) — byte-compatible with
         ``finalize_labels``.  The range lets one store hold both label sides
         (the fused sweep's role-split layout)."""
+        return self._timed("finalize", self._finalize, start, stop)
+
+    def _finalize(self, start: int = 0, stop: Optional[int] = None) -> np.ndarray:
         stop = self.n if stop is None else stop
         lens = self.lens[start:stop]
         mat = self.mat[start:stop]
@@ -670,6 +740,7 @@ class _BuildCheckpointer:
         self.every = max(int(every), 1)
         self.keep = max(int(keep), 1)
         self.written = 0
+        self.save_seconds = 0.0
 
     def maybe_save(self, done: int, store: _LabelStore, meta: dict) -> None:
         if done % self.every:
@@ -679,9 +750,14 @@ class _BuildCheckpointer:
         meta = dict(meta, done=int(done),
                     store_n=store.n, store_deep_cap=store.DEEP_CAP,
                     store_null=store.null)
-        os.makedirs(self.path, exist_ok=True)
-        save_blocks(os.path.join(self.path, f"ckpt_{done:08d}"),
-                    store.to_arrays(), meta)
+        sp = (trace.span("build.checkpoint", cat="build", args={"done": int(done)})
+              if ON.enabled else trace.NOOP_SPAN)
+        t0 = time.perf_counter()
+        with sp:
+            os.makedirs(self.path, exist_ok=True)
+            save_blocks(os.path.join(self.path, f"ckpt_{done:08d}"),
+                        store.to_arrays(), meta)
+        self.save_seconds += time.perf_counter() - t0
         self.written += 1
         self._gc()
 
@@ -816,6 +892,7 @@ def _build_wave(
     ckpt: Optional[_BuildCheckpointer] = None,
     fingerprint: Optional[str] = None,
     restored=None,
+    stage_out: Optional[dict] = None,
 ) -> ReachabilityOracle:
     n = g.n
     if n == 0:
@@ -864,10 +941,15 @@ def _build_wave(
         # this wave's word width so short waves don't pay for max_wave
         hop_row_ids = np.concatenate([members + n, members])
         kwe = bitset.n_words(2 * wlen)
-        _wave_sweep(
-            members_c, ranks_c, hop_row_ids, ranks.astype(np.int64),
-            store, indptr_c, indices_c, hop_mask[:, :kwe], visited[:, :kwe],
-        )
+        sp = (trace.span("build.wave", cat="build",
+                         args={"index": wi, "size": wlen})
+              if ON.enabled else trace.NOOP_SPAN)
+        with sp:
+            _wave_sweep(
+                members_c, ranks_c, hop_row_ids, ranks.astype(np.int64),
+                store, indptr_c, indices_c, hop_mask[:, :kwe], visited[:, :kwe],
+            )
+        _WAVES_EXACT.inc()
         base += wlen
         done += 1
         if ckpt is not None:
@@ -877,13 +959,16 @@ def _build_wave(
                 "impl": "wave", "fingerprint": fingerprint, "wave_idx": wi + 1,
             })
 
-    return ReachabilityOracle(
+    oracle = ReachabilityOracle(
         L_out=store.finalize(0, n),
         L_in=store.finalize(n, 2 * n),
         out_len=store.lens[:n].copy(),
         in_len=store.lens[n:].copy(),
         hop_rank=_hop_rank(order, n),
     )
+    if stage_out is not None:
+        stage_out.update(store.stage_seconds)
+    return oracle
 
 
 # ---------------------------------------------------------------------------
@@ -1209,6 +1294,8 @@ def _correct_chunk(
     mask[af_rows] = False
     rows_a = v_rep[sel]
     u2, c2 = np.unique(rows_a, return_counts=True)  # u2 == af_rows
+    if ON.enabled:
+        trace.event("build.rollback", cat="build", rows=int(u2.shape[0]))
     store.rollback(u2, (store.lens[u2] - c2).astype(np.int32))
     # chaos hook: a crash between the watermark rollback and the surviving
     # re-append is the worst case for checkpoint resume — the store has
@@ -1281,6 +1368,7 @@ def _build_speculative(
     ckpt: Optional[_BuildCheckpointer] = None,
     fingerprint: Optional[str] = None,
     restored=None,
+    stage_out: Optional[dict] = None,
 ) -> ReachabilityOracle:
     """Speculative wave construction: optimistic chunks + certify + bounded
     rollback-replay.  Byte-identical to the scalar reference builder."""
@@ -1356,10 +1444,14 @@ def _build_speculative(
             ranks, half, store, indptr_c, indices_c,
             hop_rev1, hop_fwd1, visited1, labeled1,
         )
+        sp = (trace.span("build.certify", cat="build", args={"w": w})
+              if ON.enabled else trace.NOOP_SPAN)
         t0 = time.perf_counter()
-        viol = _certify_chunk(members, n, 1, labeled1, log)
+        with sp:
+            viol = _certify_chunk(members, n, 1, labeled1, log)
         st["certify_seconds"] += time.perf_counter() - t0
         st["spec_waves"] += 1
+        _WAVES_SPEC.inc()
         st["spec_members"] += w
         n_viol = 0
         if viol is not None:
@@ -1368,9 +1460,13 @@ def _build_speculative(
             n_viol = int(either.sum())
             st["violations"] += n_viol
             st["replayed_sides"] += int(viol_rev.sum()) + int(viol_fwd.sum())
+            sp = (trace.span("build.replay", cat="build",
+                             args={"violations": n_viol, "w": w})
+                  if ON.enabled else trace.NOOP_SPAN)
             t0 = time.perf_counter()
-            _correct_chunk(store, log, viol_rev, viol_fwd, members, base, n,
-                           indptr_c, indices_c, corr_mask)
+            with sp:
+                _correct_chunk(store, log, viol_rev, viol_fwd, members, base,
+                               n, indptr_c, indices_c, corr_mask)
             st["replayed_members"] += n_viol
             st["replay_seconds"] += time.perf_counter() - t0
         visited1[touched] = 0
@@ -1418,12 +1514,17 @@ def _build_speculative(
             members_c = np.concatenate([members, members + n])
             hop_row_ids = np.concatenate([members + n, members])
             kwe = bitset.n_words(2 * wlen)
-            _wave_sweep(
-                members_c, np.concatenate([ranks, ranks]), hop_row_ids,
-                ranks.astype(np.int64), store, indptr_c, indices_c,
-                hop_mask[:, :kwe], visited[:, :kwe],
-            )
+            sp = (trace.span("build.wave", cat="build",
+                             args={"index": wi, "size": wlen})
+                  if ON.enabled else trace.NOOP_SPAN)
+            with sp:
+                _wave_sweep(
+                    members_c, np.concatenate([ranks, ranks]), hop_row_ids,
+                    ranks.astype(np.int64), store, indptr_c, indices_c,
+                    hop_mask[:, :kwe], visited[:, :kwe],
+                )
             st["exact_waves"] += 1
+            _WAVES_EXACT.inc()
             done += 1
             if ckpt is not None:
                 _save(wi, wlen, wlen)
@@ -1451,15 +1552,26 @@ def _build_speculative(
                     # sequential scalar loop for the remaining optimistic
                     # ranks (chunk-wise, so the checkpoint cursor still
                     # covers it), bounding total work at ~reference cost
-                    for j in range(off, off + c):
-                        v_j = int(order[base + j])
-                        rank_j = base + j
-                        _scalar_replay(indptr_c, indices_c, v_j, n + v_j,
-                                       rank_j, store, prune_mark)
-                        _scalar_replay(indptr_c, indices_c, n + v_j, v_j,
-                                       rank_j, store, prune_mark)
+                    sp = (trace.span("build.chunk", cat="build",
+                                     args={"wave": wi, "off": off, "size": c,
+                                           "mode": "scalar_bailout"})
+                          if ON.enabled else trace.NOOP_SPAN)
+                    with sp:
+                        for j in range(off, off + c):
+                            v_j = int(order[base + j])
+                            rank_j = base + j
+                            _scalar_replay(indptr_c, indices_c, v_j, n + v_j,
+                                           rank_j, store, prune_mark)
+                            _scalar_replay(indptr_c, indices_c, n + v_j, v_j,
+                                           rank_j, store, prune_mark)
+                    _WAVES_BAILOUT.inc()
                 else:
-                    _spec_chunk(base + off, c)
+                    sp = (trace.span("build.chunk", cat="build",
+                                     args={"wave": wi, "off": off, "size": c,
+                                           "mode": "speculative"})
+                          if ON.enabled else trace.NOOP_SPAN)
+                    with sp:
+                        _spec_chunk(base + off, c)
                 off += c
                 done += 1
                 if ckpt is not None:
@@ -1472,13 +1584,18 @@ def _build_speculative(
         st["certify_seconds"] = round(st["certify_seconds"], 4)
         st["replay_seconds"] = round(st["replay_seconds"], 4)
         stats_out.update(st)
-    return ReachabilityOracle(
+    oracle = ReachabilityOracle(
         L_out=store.finalize(0, n),
         L_in=store.finalize(n, 2 * n),
         out_len=store.lens[:n].copy(),
         in_len=store.lens[n:].copy(),
         hop_rank=_hop_rank(order, n),
     )
+    if stage_out is not None:
+        stage_out.update(store.stage_seconds)
+        stage_out["certify"] = st["certify_seconds"]
+        stage_out["replay"] = st["replay_seconds"]
+    return oracle
 
 
 def sort_label_rows(mat: np.ndarray) -> np.ndarray:

@@ -43,6 +43,8 @@ import numpy as np
 from repro.build import bitset
 from repro.build.engine import _hop_rank, sort_label_rows
 from repro.build.waves import wave_schedule
+from repro.obs import trace
+from repro.obs.state import ON
 from repro.core.oracle import ReachabilityOracle, finalize_labels
 from repro.core.order import get_order
 from repro.graph.csr import CSRGraph, INVALID
@@ -354,50 +356,59 @@ def distribution_labeling_device(
     ranks_of = np.arange(n, dtype=np.int32)
 
     base = 0
-    for wlen in waves:
+    for wi, wlen in enumerate(waves):
         wlen = int(wlen)
-        members = np.full(w, 0, dtype=np.int32)
-        members[:wlen] = order[base : base + wlen]
-        valid = np.zeros(w, dtype=bool)
-        valid[:wlen] = True
-        ranks = np.zeros(w, dtype=np.int32)
-        ranks[:wlen] = ranks_of[base : base + wlen]
-        m_j, v_j, r_j = jnp.asarray(members), jnp.asarray(valid), jnp.asarray(ranks)
-        # reverse then forward: the forward prune set L_out(v_j) must see
-        # the member's own rank, which the reverse sweep just appended
-        for direction in ("rev", "fwd"):
-            while True:
-                if step_rev is None:
-                    step_rev = _make_wave_step(
-                        n, w, l_max, ex_out, prune_cap=prune_cap, donate=donate)
-                    step_fwd = _make_wave_step(
-                        n, w, l_max, ex_in, prune_cap=prune_cap, donate=donate)
-                # the target matrix + lengths may be donated into the step,
-                # so rebind to the outputs unconditionally — the old buffers
-                # are dead either way, and res[3] carries the pre-wave
-                # lengths an overflow undo needs
-                if direction == "rev":
-                    res = step_rev(L_in, L_out, out_len, m_j, v_j, r_j)
-                    L_out, out_len = res[0], res[1]
-                else:
-                    res = step_fwd(L_out, L_in, in_len, m_j, v_j, r_j)
-                    L_in, in_len = res[0], res[1]
-                if not bool(res[2]):  # overflow flag: one scalar per sweep
-                    break
-                # overflow: watermark-undo the partial appends (they only
-                # wrote columns past the pre-wave lengths), grow the label
-                # matrices, and re-run this sweep
-                if direction == "rev":
-                    L_out, out_len = undo(L_out, res[3]), res[3]
-                else:
-                    L_in, in_len = undo(L_in, res[3]), res[3]
-                l_max *= 2
-                grow = functools.partial(
-                    jnp.pad, pad_width=((0, 0), (0, l_max // 2)),
-                    constant_values=INVALID,
-                )
-                L_out, L_in = grow(L_out), grow(L_in)
-                step_rev = step_fwd = None
+        # annotate=True also emits a jax.profiler TraceAnnotation when the
+        # tracer's jax_annotations flag is on, so device profiles line up
+        # with the exported Chrome timeline wave-for-wave
+        sp = (trace.span("build.wave", cat="build",
+                         args={"index": wi, "size": wlen}, annotate=True)
+              if ON.enabled else trace.NOOP_SPAN)
+        with sp:
+            members = np.full(w, 0, dtype=np.int32)
+            members[:wlen] = order[base : base + wlen]
+            valid = np.zeros(w, dtype=bool)
+            valid[:wlen] = True
+            ranks = np.zeros(w, dtype=np.int32)
+            ranks[:wlen] = ranks_of[base : base + wlen]
+            m_j, v_j, r_j = jnp.asarray(members), jnp.asarray(valid), jnp.asarray(ranks)
+            # reverse then forward: the forward prune set L_out(v_j) must see
+            # the member's own rank, which the reverse sweep just appended
+            for direction in ("rev", "fwd"):
+                while True:
+                    if step_rev is None:
+                        step_rev = _make_wave_step(
+                            n, w, l_max, ex_out, prune_cap=prune_cap, donate=donate)
+                        step_fwd = _make_wave_step(
+                            n, w, l_max, ex_in, prune_cap=prune_cap, donate=donate)
+                    # the target matrix + lengths may be donated into the
+                    # step, so rebind to the outputs unconditionally — the
+                    # old buffers are dead either way, and res[3] carries
+                    # the pre-wave lengths an overflow undo needs
+                    if direction == "rev":
+                        res = step_rev(L_in, L_out, out_len, m_j, v_j, r_j)
+                        L_out, out_len = res[0], res[1]
+                    else:
+                        res = step_fwd(L_out, L_in, in_len, m_j, v_j, r_j)
+                        L_in, in_len = res[0], res[1]
+                    if not bool(res[2]):  # overflow flag: one scalar per sweep
+                        break
+                    # overflow: watermark-undo the partial appends (they only
+                    # wrote columns past the pre-wave lengths), grow the label
+                    # matrices, and re-run this sweep
+                    if ON.enabled:
+                        sp.event("overflow_regrow", l_max=l_max * 2)
+                    if direction == "rev":
+                        L_out, out_len = undo(L_out, res[3]), res[3]
+                    else:
+                        L_in, in_len = undo(L_in, res[3]), res[3]
+                    l_max *= 2
+                    grow = functools.partial(
+                        jnp.pad, pad_width=((0, 0), (0, l_max // 2)),
+                        constant_values=INVALID,
+                    )
+                    L_out, L_in = grow(L_out), grow(L_in)
+                    step_rev = step_fwd = None
         base += wlen
 
     return ReachabilityOracle(

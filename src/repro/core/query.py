@@ -3,15 +3,19 @@
 ``repro.serve`` instead; this module keeps the long-standing
 ``repro.core.query`` entry points alive for one more release and warns on
 import so downstream callers migrate before it is removed.
+
+Removal date: 2026-10-01.  Nothing in-tree imports this module any more
+(tests exercise the shim itself, via ``repro.serve.engine`` identity);
+after that date delete the file and the shim test in tests/test_dynamic.py.
 """
 from __future__ import annotations
 
 import warnings
 
 warnings.warn(
-    "repro.core.query is deprecated: the serve path lives in repro.serve "
-    "(QueryEngine / serve_step / make_sharded_serve_step); import from "
-    "repro.serve.engine instead",
+    "repro.core.query is deprecated and will be removed after 2026-10-01: "
+    "the serve path lives in repro.serve (QueryEngine / serve_step / "
+    "make_sharded_serve_step); import from repro.serve.engine instead",
     DeprecationWarning,
     stacklevel=2,
 )

@@ -46,8 +46,22 @@ from repro.dynamic import delta as delta_mod
 from repro.dynamic.delta import CondensationState, UpdateBatch
 from repro.dynamic.repair import MutableLabels, repair_delete, repair_insert
 from repro.graph.csr import CSRGraph
+from repro.obs import metrics, trace
+from repro.obs.state import ON
 from repro.serve.engine import QueryEngine
 from repro.serve.prefilter import apply_prefilters, topo_levels
+
+# growth_log stays the per-epoch history view; the registry carries the
+# live aggregates the unified snapshot surface reports
+_M_PUBLISHES = metrics.counter(
+    "dynamic_publishes_total", "published epochs, by kind",
+    labelnames=("kind",))
+_PUB_REPAIRED = _M_PUBLISHES.labels(kind="repaired")
+_PUB_REBUILT = _M_PUBLISHES.labels(kind="rebuilt")
+_M_LABEL_INTS = metrics.gauge(
+    "dynamic_label_ints", "label ints in the latest published epoch")
+_M_GROWTH_RATE = metrics.gauge(
+    "dynamic_growth_rate", "label-int growth rate of the latest publish")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -279,59 +293,73 @@ class DynamicOracle:
         epoch serving and the working state intact, so the publish can
         simply be retried."""
         rebuilt = self._rebuild_pending
+        sp = (trace.span("publish.stage", cat="dynamic",
+                         args={"epoch": self._epoch + 1, "rebuilt": rebuilt})
+              if ON.enabled else trace.NOOP_SPAN)
         # ---- stage ----------------------------------------------------
-        staged_rebuild = None
-        if rebuilt:
-            dag = self.delta.dag_csr()
-            base = build_distribution_labels(dag, impl=self.build_impl)
-            staged_rebuild = {
-                "hop_rank": base.hop_rank,
-                "inv_rank": np.argsort(base.hop_rank).astype(np.int32),
-                "labels": MutableLabels.from_oracle(base),
-                "level": topo_levels(dag),
-            }
-            oracle = base
-        else:
-            out_rows, in_rows = self.labels.peek_dirty()
-            oracle = (self._base_oracle.with_updated_rows(out_rows, in_rows)
-                      if (out_rows or in_rows) else self._base_oracle)
-        fallback = self.delta.dag_csr()  # frozen graph of THIS epoch
-        # chaos hook: a crash here must leave the old epoch serving and the
-        # epoch counter unchanged (regression: dynamic.publish injection)
-        inject.fire("dynamic.publish", epoch=self._epoch + 1, rebuilt=rebuilt)
+        with sp:
+            staged_rebuild = None
+            if rebuilt:
+                dag = self.delta.dag_csr()
+                base = build_distribution_labels(dag, impl=self.build_impl)
+                staged_rebuild = {
+                    "hop_rank": base.hop_rank,
+                    "inv_rank": np.argsort(base.hop_rank).astype(np.int32),
+                    "labels": MutableLabels.from_oracle(base),
+                    "level": topo_levels(dag),
+                }
+                oracle = base
+            else:
+                out_rows, in_rows = self.labels.peek_dirty()
+                oracle = (self._base_oracle.with_updated_rows(out_rows, in_rows)
+                          if (out_rows or in_rows) else self._base_oracle)
+            fallback = self.delta.dag_csr()  # frozen graph of THIS epoch
+            # chaos hook: a crash here must leave the old epoch serving and
+            # the epoch counter unchanged (regression: dynamic.publish
+            # injection)
+            inject.fire("dynamic.publish", epoch=self._epoch + 1,
+                        rebuilt=rebuilt)
+        sp = (trace.span("publish.commit", cat="dynamic",
+                         args={"epoch": self._epoch + 1, "rebuilt": rebuilt})
+              if ON.enabled else trace.NOOP_SPAN)
         # ---- commit ---------------------------------------------------
-        # read the epoch window's churn BEFORE a rebuild swaps in a fresh
-        # MutableLabels (whose counters start at zero) — rebuild epochs are
-        # exactly the churn-heaviest ones
-        appends, drops = self.labels.epoch_counters()
-        if rebuilt:
-            self.hop_rank = staged_rebuild["hop_rank"]
-            self.inv_rank = staged_rebuild["inv_rank"]
-            self.labels = staged_rebuild["labels"]
-            self.level = staged_rebuild["level"]
-            self._rebuild_pending = False
-            self._churn = 0
-            self.rebuild_count += 1
-        else:
-            self.labels.clear_dirty()
-        self._base_oracle = oracle
-        self._epoch += 1
-        self._install_epoch(oracle)
-        self.engine.refresh(oracle, level=self.level, epoch=self._epoch,
-                            fallback_graph=fallback)
+        with sp:
+            # read the epoch window's churn BEFORE a rebuild swaps in a fresh
+            # MutableLabels (whose counters start at zero) — rebuild epochs
+            # are exactly the churn-heaviest ones
+            appends, drops = self.labels.epoch_counters()
+            if rebuilt:
+                self.hop_rank = staged_rebuild["hop_rank"]
+                self.inv_rank = staged_rebuild["inv_rank"]
+                self.labels = staged_rebuild["labels"]
+                self.level = staged_rebuild["level"]
+                self._rebuild_pending = False
+                self._churn = 0
+                self.rebuild_count += 1
+            else:
+                self.labels.clear_dirty()
+            self._base_oracle = oracle
+            self._epoch += 1
+            self._install_epoch(oracle)
+            self.engine.refresh(oracle, level=self.level, epoch=self._epoch,
+                                fallback_graph=fallback)
         # growth-rate tracking: a persistently positive rate under churn is
         # rank drift (repairs distribute at stale build-time ranks) and
         # argues for re-ranking before the staleness budget fires
         ints = self.labels.label_ints()
         prev = max(self._last_ints, 1)
+        rate = round((ints - self._last_ints) / prev, 6)
         self.growth_log.append({
             "epoch": self._epoch,
             "label_ints": ints,
             "appends": appends,
             "drops": drops,
             "rebuilt": rebuilt,
-            "growth_rate": round((ints - self._last_ints) / prev, 6),
+            "growth_rate": rate,
         })
+        (_PUB_REBUILT if rebuilt else _PUB_REPAIRED).inc()
+        _M_LABEL_INTS.set(ints)
+        _M_GROWTH_RATE.set(rate)
         self._last_ints = ints
         return self._epoch
 

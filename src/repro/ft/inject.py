@@ -56,6 +56,15 @@ from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.obs import metrics, trace
+from repro.obs.state import ON
+
+_M_FAULTS = metrics.counter(
+    "faults_injected_total", "simulated faults that actually fired, by kind",
+    labelnames=("kind",))
+_FAULT_STALL = _M_FAULTS.labels(kind="stall")
+_FAULT_FAIL = _M_FAULTS.labels(kind="fail")
+
 
 class SimulatedFailure(RuntimeError):
     """Raised by a fault-injection hook to emulate a crash.
@@ -105,10 +114,23 @@ class Injector:
             # stall BEFORE the failure check: a site can be both slow and
             # then fail at a later occurrence, mirroring a degrading device
             self.stalled.append(f"{site}[{idx}]")
-            time.sleep(lat[1])
+            _FAULT_STALL.inc()
+            if ON.enabled:
+                # the stall itself is a span: the exported timeline shows the
+                # injected latency exactly where the dispatch paid it
+                with trace.span("fault.stall", cat="fault",
+                                args={"site": site, "occurrence": idx,
+                                      "seconds": lat[1]}):
+                    time.sleep(lat[1])
+            else:
+                time.sleep(lat[1])
         if idx in self.rules.get(site, ()):
             detail = " ".join(f"{k}={v}" for k, v in sorted(info.items()))
             self.fired.append(site)
+            _FAULT_FAIL.inc()
+            if ON.enabled:
+                trace.event("fault.fail", cat="fault", site=site,
+                            occurrence=idx, **info)
             raise SimulatedFailure(
                 f"injected failure at {site}[{idx}]" + (f" ({detail})" if detail else ""))
 

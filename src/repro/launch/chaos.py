@@ -23,6 +23,7 @@ from repro.dynamic import DurableDynamicOracle, DynamicOracle, UpdateBatch
 from repro.ft import inject
 from repro.ft.inject import SimulatedFailure
 from repro.graph.generators import layered_dag, random_dag
+from repro.obs import metrics, trace
 from repro.persist import CorruptSnapshotError, load_oracle, save_oracle
 
 
@@ -256,6 +257,12 @@ def main() -> None:
     ap.add_argument("--scenario", default="all",
                     choices=["all", *SCENARIOS])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write the run's Chrome-trace timeline here before "
+                         "exiting (CI uploads it as a failure artifact)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot JSON here "
+                         "before exiting")
     args = ap.parse_args()
     names = list(SCENARIOS) if args.scenario == "all" else [args.scenario]
     # every scenario runs even when an earlier one fails or raises — a crash
@@ -264,12 +271,22 @@ def main() -> None:
     results: dict = {}
     for name in names:
         print(f"=== {name} ===")
-        try:
-            results[name] = bool(SCENARIOS[name](args.seed))
-        except Exception as e:   # noqa: BLE001 - the driver is the backstop
-            print(f"{name}: FAIL (unhandled {type(e).__name__}: {e})")
-            results[name] = False
+        with trace.span(f"chaos.{name}", cat="chaos",
+                        args={"seed": args.seed}):
+            try:
+                results[name] = bool(SCENARIOS[name](args.seed))
+            except Exception as e:   # noqa: BLE001 - the driver is the backstop
+                print(f"{name}: FAIL (unhandled {type(e).__name__}: {e})")
+                results[name] = False
     failed = [n for n, ok in results.items() if not ok]
+    if args.trace_out:
+        trace.export_chrome(args.trace_out,
+                            meta={"driver": "chaos", "seed": args.seed,
+                                  "failed": failed})
+        print(f"wrote trace -> {args.trace_out}")
+    if args.metrics_out:
+        metrics.export_json(args.metrics_out)
+        print(f"wrote metrics -> {args.metrics_out}")
     if failed:
         print(f"chaos scenarios FAILED: {', '.join(failed)} "
               f"({len(failed)}/{len(results)})")

@@ -27,12 +27,15 @@ import asyncio
 import json
 import os
 import signal
+import threading
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.api import build_oracle, oracle_from_snapshot
 from repro.ft import inject
+from repro.obs import metrics, trace
 from repro.serve.daemon import DaemonConfig, ServeDaemon
 from repro.serve.engine import select_backend
 from repro.serve.openloop import run_open_loop
@@ -250,6 +253,20 @@ def fault_plan_from_args(args):
     return inject.Injector(rules, latency=latency)
 
 
+def _dump_obs(args) -> None:
+    """Export the trace ring / metrics snapshot to the CLI out-files.
+
+    Runs on every exit path (normal completion, SIGTERM drain, faulted
+    abort), so a misbehaving run still leaves its timeline behind."""
+    if getattr(args, "trace_out", None):
+        trace.export_chrome(args.trace_out,
+                            meta={"mode": args.mode, "dataset": args.dataset})
+        print(f"wrote trace -> {args.trace_out}")
+    if getattr(args, "metrics_out", None):
+        metrics.export_json(args.metrics_out)
+        print(f"wrote metrics -> {args.metrics_out}")
+
+
 def run_daemon(args) -> None:
     g = make_graph(args)
     target = build_target(args, g)
@@ -287,6 +304,20 @@ def run_daemon(args) -> None:
         daemon_box["daemon"] = self
 
     ServeDaemon.__init__ = _capturing_init
+    # zero the registry and trace ring at daemon start: the exported metrics
+    # snapshot then reconciles EXACTLY with this run's daemon counters
+    # (build-time metrics would otherwise leak into the serving numbers)
+    metrics.REGISTRY.reset()
+    trace.TRACER.clear()
+    stop_dump = threading.Event()
+    dump_thread = None
+    if args.metrics_out and args.metrics_interval > 0:
+        def _periodic() -> None:
+            while not stop_dump.wait(args.metrics_interval):
+                metrics.export_json(args.metrics_out)
+
+        dump_thread = threading.Thread(target=_periodic, daemon=True)
+        dump_thread.start()
     try:
         report = run_open_loop(
             target, g,
@@ -302,6 +333,10 @@ def run_daemon(args) -> None:
         ServeDaemon.__init__ = orig_init
         signal.signal(signal.SIGTERM, old_term)
         signal.signal(signal.SIGINT, old_int)
+        stop_dump.set()
+        if dump_thread is not None:
+            dump_thread.join(timeout=2.0)
+        _dump_obs(args)
 
     daemon = daemon_box.get("daemon")
     health = daemon.health() if daemon is not None else {}
@@ -379,8 +414,23 @@ def main() -> None:
     ap.add_argument("--inject-device-latency", default=None, metavar="OCCS:MS",
                     help="daemon mode: stall the given device-dispatch "
                          "occurrences by MS milliseconds (e.g. '2-6:60')")
+    # observability
+    ap.add_argument("--trace-out", default=None,
+                    help="daemon mode: write the run's Chrome-trace timeline "
+                         "here at exit (load in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="daemon mode: write the metrics-registry snapshot "
+                         "JSON here at exit")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="also rewrite --metrics-out every N seconds while "
+                         "the daemon runs")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the observability layer entirely "
+                         "(obs.disable(); the overhead-guard baseline)")
     args = ap.parse_args()
 
+    if args.no_obs:
+        obs.disable()
     if args.mode == "daemon":
         run_daemon(args)
     else:

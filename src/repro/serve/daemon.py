@@ -47,6 +47,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import metrics, trace
+from repro.obs.state import ON
+
 
 class ShedError(RuntimeError):
     """A request the daemon refused (admission) or dropped (expired).
@@ -88,6 +91,7 @@ class _Request:
     deadline: float            # absolute time.monotonic()
     t_submit: float
     future: asyncio.Future
+    trace_id: int = 0          # obs.trace id carried admission -> completion
 
 
 class CircuitBreaker:
@@ -139,6 +143,10 @@ class CircuitBreaker:
         self.trips += 1
         self.open_until = now + self.backoff
         self.consecutive = 0
+        _BREAKER_TRIPS.inc()
+        if ON.enabled:
+            trace.event("breaker_open", cat="daemon", trips=self.trips,
+                        backoff_ms=round(self.backoff * 1000, 1))
 
     def snapshot(self, now: float) -> dict:
         return {
@@ -157,6 +165,47 @@ _ZERO_COUNTERS = {
     "batches": 0, "device_batches": 0, "breaker_host_batches": 0,
     "pinned_epoch_batches": 0, "pinned_device_to_host": 0,
     "publishes": 0,
+}
+
+# Registry-backed mirrors of the per-daemon counter dict: every counter key
+# maps to a bound child of a labeled family, resolved ONCE here so the hot
+# path pays a dict lookup + one add.  The dict on the daemon instance stays
+# the per-instance view (openloop reports read it); the registry is the
+# process-global surface health()/--metrics-out export.
+_REQUESTS = metrics.counter(
+    "daemon_requests_total", "queries through admission, by outcome stage",
+    labelnames=("event",))
+_SHED = metrics.counter(
+    "daemon_shed_total", "queries shed, by reason", labelnames=("reason",))
+_BATCHES = metrics.counter(
+    "daemon_batches_total", "dispatched batches, by serving rung",
+    labelnames=("rung",))
+_PUBLISHES = metrics.counter(
+    "daemon_publishes_total", "dynamic epochs published through the daemon")
+_BREAKER_TRIPS = metrics.counter(
+    "daemon_breaker_trips_total", "circuit-breaker closed/half_open -> open flips")
+_QUEUE_DEPTH = metrics.gauge(
+    "daemon_queue_depth", "admitted queries waiting for a dispatch tick")
+_REQ_LATENCY = metrics.histogram(
+    "daemon_request_latency_ms", "answered requests, arrival -> future resolve")
+_DISPATCH_MS = metrics.histogram(
+    "daemon_dispatch_ms", "padded-batch dispatch wall time (worker thread)")
+
+_COUNTER_METRICS = {
+    "submitted": _REQUESTS.labels(event="submitted"),
+    "admitted": _REQUESTS.labels(event="admitted"),
+    "answered": _REQUESTS.labels(event="answered"),
+    "shed_queue_full": _SHED.labels(reason="queue_full"),
+    "shed_deadline": _SHED.labels(reason="deadline"),
+    "shed_draining": _SHED.labels(reason="draining"),
+    "shed_expired": _SHED.labels(reason="expired"),
+    "shed_killed": _SHED.labels(reason="killed"),
+    "batches": _BATCHES.labels(rung="all"),
+    "device_batches": _BATCHES.labels(rung="device"),
+    "breaker_host_batches": _BATCHES.labels(rung="breaker_host"),
+    "pinned_epoch_batches": _BATCHES.labels(rung="pinned_epoch"),
+    "pinned_device_to_host": _BATCHES.labels(rung="pinned_host"),
+    "publishes": _PUBLISHES.labels(),
 }
 
 
@@ -201,6 +250,12 @@ class ServeDaemon:
         self._engine_lock = threading.Lock()
         self._loop_task: Optional[asyncio.Task] = None
 
+    def _count(self, key: str, n: int = 1) -> None:
+        """Bump the per-instance counter AND its registry mirror, so the
+        daemon report and ``metrics.snapshot()`` reconcile exactly."""
+        self.counters[key] += n
+        _COUNTER_METRICS[key].inc(n)
+
     # ---------------------------------------------------------- lifecycle
 
     async def start(self) -> None:
@@ -234,7 +289,10 @@ class ServeDaemon:
             req = self._queue.get_nowait()
             if req is not None and not req.future.done():
                 req.future.set_exception(ShedError("killed"))
-                self.counters["shed_killed"] += req.queries.shape[0]
+                self._count("shed_killed", req.queries.shape[0])
+                if ON.enabled:
+                    trace.event("shed", cat="request", reason="killed",
+                                trace_id=req.trace_id)
         self._queued = 0
         self.state = "killed"
 
@@ -263,27 +321,49 @@ class ServeDaemon:
         *now* rather than timing out later."""
         queries = np.ascontiguousarray(np.asarray(queries, dtype=np.int32))
         n = int(queries.shape[0])
-        self.counters["submitted"] += n
+        self._count("submitted", n)
+        # the admission span + trace id are the start of the request's
+        # lifecycle in the exported timeline; sheds are terminal events on
+        # the same id (guarded: this is the per-request hot path)
+        tid = trace.new_trace_id() if ON.enabled else 0
+        adm = trace.begin("admission", cat="request",
+                          args={"trace_id": tid, "n": n}) if ON.enabled else None
         if self.state != "ready":
-            self.counters["shed_draining"] += n
+            self._count("shed_draining", n)
+            if adm is not None:
+                trace.end(adm)
+                trace.event("shed", cat="request", reason="draining",
+                            trace_id=tid)
             raise ShedError("draining", f"daemon state={self.state}")
         if self._queued + n > self.cfg.queue_limit:
-            self.counters["shed_queue_full"] += n
+            self._count("shed_queue_full", n)
+            if adm is not None:
+                trace.end(adm)
+                trace.event("shed", cat="request", reason="queue_full",
+                            trace_id=tid)
             raise ShedError("queue_full",
                             f"{self._queued} queued >= {self.cfg.queue_limit}")
         budget_s = (self.cfg.deadline_ms if deadline_ms is None
                     else float(deadline_ms)) / 1000.0
         if self._estimated_wait_s(n) > self.cfg.shed_headroom * budget_s:
-            self.counters["shed_deadline"] += n
+            self._count("shed_deadline", n)
+            if adm is not None:
+                trace.end(adm)
+                trace.event("shed", cat="request", reason="deadline",
+                            trace_id=tid)
             raise ShedError("deadline",
                             f"est wait {self._estimated_wait_s(n) * 1000:.1f}ms "
                             f"> budget {budget_s * 1000:.0f}ms")
         now = time.monotonic()
         req = _Request(queries=queries, deadline=now + budget_s,
                        t_submit=now,
-                       future=asyncio.get_running_loop().create_future())
-        self.counters["admitted"] += n
+                       future=asyncio.get_running_loop().create_future(),
+                       trace_id=tid)
+        self._count("admitted", n)
         self._queued += n
+        _QUEUE_DEPTH.set(self._queued)
+        if adm is not None:
+            trace.end(adm, admitted=True)
         self._queue.put_nowait(req)
         return await req.future
 
@@ -320,17 +400,29 @@ class ServeDaemon:
             if req.deadline <= now:
                 # admitted but its budget died in the queue: serving it would
                 # only push live requests past THEIR deadlines
-                self.counters["shed_expired"] += req.queries.shape[0]
+                self._count("shed_expired", req.queries.shape[0])
+                if ON.enabled:
+                    # the queue span ends here, terminally: expiry event
+                    self._queue_span(req, now, expired=True)
+                    trace.event("shed", cat="request", reason="expired",
+                                trace_id=req.trace_id)
                 req.future.set_exception(ShedError("expired"))
             else:
+                if ON.enabled:
+                    self._queue_span(req, now, expired=False)
                 live.append(req)
+        _QUEUE_DEPTH.set(self._queued)
         if not live:
             return
         q = np.concatenate([r.queries for r in live], axis=0)
         n = int(q.shape[0])
         batch_deadline = min(r.deadline for r in live)
         self._inflight = n
-        self.counters["batches"] += 1
+        self._count("batches")
+        tick = trace.begin(
+            "dispatch_tick", cat="daemon",
+            args={"n_requests": len(live), "n_queries": n,
+                  "trace_ids": [r.trace_id for r in live]}) if ON.enabled else None
         loop = asyncio.get_running_loop()
         try:
             t0 = time.monotonic()
@@ -343,8 +435,12 @@ class ServeDaemon:
             for req in live:
                 if not req.future.done():
                     req.future.set_exception(ShedError("killed"))
-                    self.counters["shed_killed"] += req.queries.shape[0]
+                    self._count("shed_killed", req.queries.shape[0])
+                    if ON.enabled:
+                        trace.event("shed", cat="request", reason="killed",
+                                    trace_id=req.trace_id)
             self._inflight = 0
+            trace.end(tick, outcome="killed")
             raise
         except Exception as e:
             # a rung below already warned; requests fail loudly, not wrongly
@@ -352,8 +448,11 @@ class ServeDaemon:
                 if not req.future.done():
                     req.future.set_exception(e)
             self._inflight = 0
+            trace.end(tick, outcome=f"error:{type(e).__name__}")
             return
         self._inflight = 0
+        _DISPATCH_MS.observe(dt * 1000.0)
+        trace.end(tick, outcome="answered")
         inst = n / max(dt, 1e-9)
         self._rate_qps = (inst if self._rate_qps is None
                           else 0.7 * self._rate_qps + 0.3 * inst)
@@ -362,10 +461,24 @@ class ServeDaemon:
         for req in live:
             hi = lo + req.queries.shape[0]
             if not req.future.done():   # kill() may have failed it already
-                self.counters["answered"] += hi - lo
-                self.latencies.append(done - req.t_submit)
+                self._count("answered", hi - lo)
+                lat_s = done - req.t_submit
+                self.latencies.append(lat_s)
+                _REQ_LATENCY.observe(lat_s * 1000.0)
+                if ON.enabled:
+                    trace.event("completed", cat="request",
+                                trace_id=req.trace_id,
+                                latency_ms=round(lat_s * 1000.0, 3))
                 req.future.set_result(answers[lo:hi])
             lo = hi
+
+    def _queue_span(self, req: _Request, now: float, expired: bool) -> None:
+        """Retroactive queue-wait span: submit -> the dispatch tick that
+        picked the request up (or expired it)."""
+        t0 = trace._now_us() - (now - req.t_submit) * 1e6
+        trace.TRACER._complete(
+            "queue", "request", t0, (now - req.t_submit) * 1e6,
+            {"trace_id": req.trace_id, "expired": expired})
 
     def _pad(self, q: np.ndarray) -> np.ndarray:
         """Pad the batch to a power-of-two row count (floor 64, cap
@@ -392,22 +505,29 @@ class ServeDaemon:
         if self._publishing and self._publish_pin is not None:
             # pinned-epoch rung: a publish is refreshing the engine right
             # now — serve from the epoch snapshot frozen at publish start
-            self.counters["pinned_epoch_batches"] += 1
+            self._count("pinned_epoch_batches")
             pin = self._publish_pin
-            try:
-                return pin.query_batch(q)[:n]
-            except Exception:
-                self.counters["pinned_device_to_host"] += 1
-                return pin.query_batch(q, device=False)[:n]
+            with trace.span("dispatch", cat="daemon",
+                            args={"rung": "pinned_epoch", "padded": int(q.shape[0])}):
+                try:
+                    return pin.query_batch(q)[:n]
+                except Exception:
+                    self._count("pinned_device_to_host")
+                    return pin.query_batch(q, device=False)[:n]
         use_device = (self.cfg.backend != "host"
                       and self.breaker.allow_device(now))
         with self._engine_lock:
             if not use_device:
-                self.counters["breaker_host_batches"] += 1
-                return self._serve(q, "host", deadline)[:n]
-            self.counters["device_batches"] += 1
+                self._count("breaker_host_batches")
+                with trace.span("dispatch", cat="daemon",
+                                args={"rung": "host", "padded": int(q.shape[0]),
+                                      "breaker": self.breaker.state}):
+                    return self._serve(q, "host", deadline)[:n]
+            self._count("device_batches")
             t0 = time.monotonic()
-            answers = self._serve(q, self.cfg.backend, deadline)
+            with trace.span("dispatch", cat="daemon", annotate=True,
+                            args={"rung": "device", "padded": int(q.shape[0])}):
+                answers = self._serve(q, self.cfg.backend, deadline)
             dt = time.monotonic() - t0
             # failure signal for the breaker: the engine's ladder downgraded
             # the device dispatch (it already re-served the batch on the
@@ -452,11 +572,12 @@ class ServeDaemon:
                 return self.target.publish()
 
         try:
-            epoch = await loop.run_in_executor(None, _apply_publish)
+            with trace.span("daemon.publish", cat="daemon"):
+                epoch = await loop.run_in_executor(None, _apply_publish)
         finally:
             self._publishing = False
             self._publish_pin = None
-        self.counters["publishes"] += 1
+        self._count("publishes")
         return int(epoch)
 
     # ------------------------------------------------------------- health
@@ -492,4 +613,7 @@ class ServeDaemon:
             "counters": dict(c),
             "latency": self._latency_pctiles(),
             "engine": self.engine.stats(),
+            # the process-global registry: one surface over daemon, engine,
+            # build, dynamic, and fault-injection metrics
+            "metrics": metrics.snapshot(),
         }

@@ -24,6 +24,7 @@ dense otherwise.
 from __future__ import annotations
 
 import copy
+import threading
 import time
 import warnings
 from functools import partial
@@ -35,6 +36,8 @@ import numpy as np
 
 from repro.ft import inject
 from repro.graph.csr import INVALID
+from repro.obs import metrics, trace
+from repro.obs.state import ON
 from repro.serve.planner import BatchPlan, plan_batch, tier_widths
 from repro.serve.prefilter import apply_prefilters
 
@@ -164,6 +167,18 @@ _ZERO_DEGRADATION = {
     "quarantined": 0,      # queries that touched quarantined label rows
 }
 
+# registry mirrors (process-global; the per-engine ``degradation`` dict stays
+# the per-instance view health()/chaos read)
+_M_QUERIES = metrics.counter(
+    "engine_queries_total", "queries through QueryEngine.query_batch")
+_M_PREFILTERED = metrics.counter(
+    "engine_prefiltered_total", "queries decided by the prefilter stack")
+_M_DEGRADED = metrics.counter(
+    "engine_degraded_total", "ladder downgrades, by kind", labelnames=("kind",))
+_DEGRADED_KIND = {k: _M_DEGRADED.labels(kind=k) for k in _ZERO_DEGRADATION}
+_M_EPOCH = metrics.gauge(
+    "engine_epoch", "label-snapshot epoch the engine currently serves")
+
 
 class QueryEngine:
     """The serve subsystem for one ReachabilityOracle.
@@ -249,8 +264,12 @@ class QueryEngine:
         self._fallback_csr = None   # resolved (graph, reverse) pair, lazy
         self.quarantine_out: Optional[np.ndarray] = None
         self.quarantine_in: Optional[np.ndarray] = None
-        # cumulative downgrade counters (ladder observability)
+        # cumulative downgrade counters (ladder observability); mutated only
+        # under _stats_lock so stats()/reset_stats() are atomic with respect
+        # to in-flight query_batch tallies (the daemon reads stats() from
+        # its publish worker thread while dispatches run in another)
         self.degradation = dict(_ZERO_DEGRADATION)
+        self._stats_lock = threading.Lock()
 
     # ---------------------------------------------------------- publishing
 
@@ -273,6 +292,7 @@ class QueryEngine:
             oracle.out_len, oracle.in_len, oracle.max_label_len, n_tiers=self.n_tiers
         )
         self.epoch = self.epoch + 1 if epoch is None else int(epoch)
+        _M_EPOCH.set(self.epoch)
         if fallback_graph is not None:
             self._fallback_graph = fallback_graph
         # the ladder's search rung must answer against the newly served
@@ -286,25 +306,31 @@ class QueryEngine:
 
     def stats(self) -> dict:
         """Consistent snapshot of the engine's serving state for health
-        endpoints: a deep copy taken in one place, so a reader can never
-        observe counters torn between two batches (the live ``degradation``
-        dict mutates per batch)."""
-        return {
-            "epoch": self.epoch,
-            "backend": self.backend,
-            "widths": list(self.widths),
-            "n_quarantined": int(
-                (0 if self.quarantine_out is None else int(self.quarantine_out.sum()))
-                + (0 if self.quarantine_in is None else int(self.quarantine_in.sum()))),
-            "degradation": dict(self.degradation),
-            "last_batch": copy.deepcopy(self.last_stats),
-        }
+        endpoints: taken under ``_stats_lock``, so a reader can never
+        observe counters torn between two batches — ``_tally`` publishes a
+        finished batch's counters and its ``last_stats`` record under the
+        same lock, and a reader in another thread (the daemon's publish
+        worker) sees either all of a batch or none of it."""
+        with self._stats_lock:
+            return {
+                "epoch": self.epoch,
+                "backend": self.backend,
+                "widths": list(self.widths),
+                "n_quarantined": int(
+                    (0 if self.quarantine_out is None else int(self.quarantine_out.sum()))
+                    + (0 if self.quarantine_in is None else int(self.quarantine_in.sum()))),
+                "degradation": dict(self.degradation),
+                "last_batch": copy.deepcopy(self.last_stats),
+            }
 
     def reset_stats(self) -> None:
         """Zero the cumulative degradation counters and the last-batch
-        record (e.g. at daemon startup, or between bench runs)."""
-        self.degradation = dict(_ZERO_DEGRADATION)
-        self.last_stats = {}
+        record (e.g. at daemon startup, or between bench runs).  Atomic with
+        respect to in-flight ``query_batch`` tallies: the counter dict is
+        swapped whole under the lock, never cleared in place."""
+        with self._stats_lock:
+            self.degradation = dict(_ZERO_DEGRADATION)
+            self.last_stats = {}
 
     # ------------------------------------------------- degradation ladder
 
@@ -364,8 +390,11 @@ class QueryEngine:
                 self.quarantine_in is not None and self.quarantine_in[v]):
             # untrusted rows: even the length/level prefilters would read
             # corrupt state — go straight to the search rung
-            self.degradation["quarantined"] += 1
-            self.degradation["searched"] += 1
+            with self._stats_lock:
+                self.degradation["quarantined"] += 1
+                self.degradation["searched"] += 1
+            _DEGRADED_KIND["quarantined"].inc()
+            _DEGRADED_KIND["searched"].inc()
             return bool(self._search_batch(np.asarray([[u, v]]))[0])
         o = self.oracle
         if o.out_len[u] == 0 or o.in_len[v] == 0:
@@ -420,67 +449,97 @@ class QueryEngine:
         pf = apply_prefilters(queries[label_idx], o.out_len, o.in_len, self.level)
         out[label_idx] = pf.decided & pf.value
         rest_idx = label_idx[~pf.decided]
-        self.last_stats = {
+        # the batch record is LOCAL until the batch finishes: _tally
+        # publishes it (with the counter adds) atomically under _stats_lock,
+        # so a concurrent stats()/reset_stats() never sees a half-built
+        # record or tears a tally mid-batch
+        stats = {
             "backend": backend,
             "n_queries": int(queries.shape[0]),
             "n_prefiltered": int(label_idx.shape[0] - rest_idx.size),
             "tiers": [],
             "degraded": degraded,
         }
-        if rest_idx.size == 0:
-            self._tally(degraded)
-            return out
-        rest = queries[rest_idx]
+        sp = trace.span("engine.batch", cat="engine", args={
+            "backend": backend, "n": stats["n_queries"],
+            "prefiltered": stats["n_prefiltered"]}) if ON.enabled else trace.NOOP_SPAN
+        with sp:
+            if rest_idx.size == 0:
+                self._tally(stats, degraded)
+                return out
+            rest = queries[rest_idx]
 
-        if backend == "host":
-            res = self._host_batch(rest)
-        elif deadline is not None and time.monotonic() > deadline:
-            # past budget before the device attempt: retrace risk is the one
-            # unbounded cost left — take the predictable path instead
-            degraded["deadline_to_host"] += int(rest.shape[0])
-            res = self._host_batch(rest)
-        else:
-            try:
-                if backend in ("dense", "kernel"):
-                    res = self._device_batch(rest, use_kernel=backend == "kernel")
-                else:
-                    res = self._sharded_batch(rest, backend)
-            except Exception as e:  # ladder: device failure -> host merge
-                degraded["device_to_host"] += int(rest.shape[0])
-                warnings.warn(
-                    f"{backend!r} backend failed ({type(e).__name__}: {e}); "
-                    f"serving {rest.shape[0]} queries on the host merge path",
-                    stacklevel=2)
+            if backend == "host":
                 res = self._host_batch(rest)
-        out[rest_idx] = res
-        self._tally(degraded)
-        return out
+            elif deadline is not None and time.monotonic() > deadline:
+                # past budget before the device attempt: retrace risk is the
+                # one unbounded cost left — take the predictable path instead
+                degraded["deadline_to_host"] += int(rest.shape[0])
+                sp.event("degrade", kind="deadline_to_host", n=int(rest.shape[0]))
+                res = self._host_batch(rest)
+            else:
+                try:
+                    if backend in ("dense", "kernel"):
+                        res = self._device_batch(
+                            rest, use_kernel=backend == "kernel", stats=stats)
+                    else:
+                        res = self._sharded_batch(rest, backend)
+                except Exception as e:  # ladder: device failure -> host merge
+                    degraded["device_to_host"] += int(rest.shape[0])
+                    sp.event("degrade", kind="device_to_host",
+                             n=int(rest.shape[0]), error=type(e).__name__)
+                    warnings.warn(
+                        f"{backend!r} backend failed ({type(e).__name__}: {e}); "
+                        f"serving {rest.shape[0]} queries on the host merge path",
+                        stacklevel=2)
+                    res = self._host_batch(rest)
+            out[rest_idx] = res
+            self._tally(stats, degraded)
+            return out
 
     def _host_batch(self, rest: np.ndarray) -> np.ndarray:
         o = self.oracle
         return np.fromiter((o.query(int(u), int(v)) for u, v in rest), dtype=bool,
                            count=rest.shape[0])
 
-    def _tally(self, degraded: dict) -> None:
+    def _tally(self, stats: dict, degraded: dict) -> None:
+        """Publish a finished batch: counters + last_stats flip together."""
+        with self._stats_lock:
+            for k, v in degraded.items():
+                self.degradation[k] += v
+            self.last_stats = stats
+        _M_QUERIES.inc(stats["n_queries"])
+        _M_PREFILTERED.inc(stats["n_prefiltered"])
         for k, v in degraded.items():
-            self.degradation[k] += v
+            if v:
+                _DEGRADED_KIND[k].inc(v)
 
     # ------------------------------------------------------------ backends
 
-    def _device_batch(self, rest: np.ndarray, use_kernel: bool) -> np.ndarray:
+    def _device_batch(self, rest: np.ndarray, use_kernel: bool,
+                      stats: Optional[dict] = None) -> np.ndarray:
         # chaos hook: an injected device failure here exercises the ladder's
         # device -> host downgrade in query_batch
         inject.fire("serve.device_dispatch", backend="kernel" if use_kernel else "dense")
+        if stats is None:
+            stats = {"tiers": []}   # direct callers outside query_batch
         o = self.oracle
         if not self.bucketing:
-            r = serve_step(self._lo, self._li, jnp.asarray(rest), use_kernel=use_kernel)
+            with trace.span("device_call", cat="device", annotate=True,
+                            args={"rows": int(rest.shape[0])} if ON.enabled else None):
+                r = serve_step(self._lo, self._li, jnp.asarray(rest),
+                               use_kernel=use_kernel)
             return np.asarray(r)
         plan = plan_batch(rest, o.out_len, o.in_len, self.widths, min_tile=self.min_tile)
         results = []
         for tier in plan.tiers:
             q = jnp.asarray(plan.padded_queries(rest, tier))
-            results.append(_tier_intersect(self._lo, self._li, q, tier.width, use_kernel))
-            self.last_stats["tiers"].append(
+            with trace.span("device_call", cat="device", annotate=True,
+                            args={"width": tier.width, "rows": tier.rows}
+                            if ON.enabled else None):
+                results.append(
+                    _tier_intersect(self._lo, self._li, q, tier.width, use_kernel))
+            stats["tiers"].append(
                 {"width": tier.width, "count": int(tier.idx.size), "rows": tier.rows}
             )
         return plan.scatter([np.asarray(r) for r in results])

@@ -24,6 +24,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.ft import inject
+from repro.obs import trace
+from repro.obs.state import ON
 from repro.serve.daemon import DaemonConfig, ServeDaemon, ShedError
 
 
@@ -104,25 +106,36 @@ def run_open_loop(
     # hundreds of ms — which would otherwise stall the queue mid-run and
     # expire a wave of arrivals that says nothing about steady-state
     # overload behavior
-    size = 64
-    while True:
-        wq = rng.integers(0, g.n, size=(min(size, cfg.max_batch), 2)).astype(
-            np.int32)
-        daemon.engine.query_batch(wq, backend=cfg.backend)
-        if size >= cfg.max_batch:
-            break
-        size *= 2
+    warm_sp = (trace.span("openloop.warmup", cat="openloop",
+                          args={"max_batch": cfg.max_batch})
+               if ON.enabled else trace.NOOP_SPAN)
+    with warm_sp:
+        size = 64
+        while True:
+            wq = rng.integers(0, g.n, size=(min(size, cfg.max_batch), 2)).astype(
+                np.int32)
+            daemon.engine.query_batch(wq, backend=cfg.backend)
+            if size >= cfg.max_batch:
+                break
+            size *= 2
     daemon.engine.reset_stats()
     answered: list = []
     shed: Dict[str, int] = {}
+    drive_sp = (trace.span("openloop.drive", cat="openloop",
+                           args={"rate": rate_arrivals_per_s,
+                                 "duration_s": duration_s,
+                                 "n_arrivals": int(arrivals.shape[0]),
+                                 "faulted": fault_plan is not None})
+                if ON.enabled else trace.NOOP_SPAN)
     t0 = time.perf_counter()
-    if fault_plan is not None:
-        with inject.active(fault_plan):
+    with drive_sp:
+        if fault_plan is not None:
+            with inject.active(fault_plan):
+                asyncio.run(_drive(daemon, arrivals, queries, deadline_ms,
+                                   answered, shed))
+        else:
             asyncio.run(_drive(daemon, arrivals, queries, deadline_ms,
                                answered, shed))
-    else:
-        asyncio.run(_drive(daemon, arrivals, queries, deadline_ms,
-                           answered, shed))
     wall_s = time.perf_counter() - t0
 
     c = daemon.counters
@@ -137,11 +150,15 @@ def run_open_loop(
 
     sample_errors = 0
     if answered and n_truth > 0:
-        aq = np.concatenate([queries[i] for i, _, _ in answered], axis=0)
-        aa = np.concatenate([a for _, a, _ in answered], axis=0)
-        pick = rng.choice(aq.shape[0], size=min(n_truth, aq.shape[0]),
-                          replace=False)
-        sample_errors = check_truth(g, aq[pick], aa[pick], limit=n_truth)
+        rep_sp = (trace.span("openloop.report", cat="openloop",
+                             args={"n_truth": n_truth})
+                  if ON.enabled else trace.NOOP_SPAN)
+        with rep_sp:
+            aq = np.concatenate([queries[i] for i, _, _ in answered], axis=0)
+            aa = np.concatenate([a for _, a, _ in answered], axis=0)
+            pick = rng.choice(aq.shape[0], size=min(n_truth, aq.shape[0]),
+                              replace=False)
+            sample_errors = check_truth(g, aq[pick], aa[pick], limit=n_truth)
 
     health = daemon.health()
     return {

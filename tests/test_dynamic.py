@@ -425,11 +425,18 @@ def test_check_monotone_gate(tmp_path):
 
 
 def test_deprecation_shim_warns():
+    # the shim is slated for removal (see its docstring for the date); until
+    # then it must warn on import and re-export the EXACT serve.engine
+    # objects — not copies — so behavior cannot drift between the two paths
     import sys
     import warnings
+
+    from repro.serve import engine as serve_engine
 
     sys.modules.pop("repro.core.query", None)
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
-        import repro.core.query  # noqa: F401
+        import repro.core.query as shim
         assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    for name in shim.__all__:
+        assert getattr(shim, name) is getattr(serve_engine, name)
