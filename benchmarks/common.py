@@ -172,7 +172,14 @@ def _serve_invariants(payload: dict, origin: str, out) -> list:
         are sized to force overflow; zero sheds means backpressure is
         disconnected) while still answering some queries,
       * the faulted row's engine ladder saw activity (device->host or
-        breaker host batches) — faults that fault nothing gate nothing.
+        breaker host batches) — faults that fault nothing gate nothing,
+      * the budget frontier (``budget_frontier`` section, when present)
+        recorded ZERO wrong answers at every budget point — closed-loop
+        rows vs both the full-store verdicts and the BFS truth sample, and
+        every budgeted open-loop faulted row — and its uncertain rate is
+        monotone non-increasing in budget (the rank-prefix cut's nesting
+        property; a violation means the three-valued verdict logic leaked),
+        with zero uncertainty at the full budget.
     """
     bad = []
     for be, rec in payload.get("backends", {}).items():
@@ -203,6 +210,40 @@ def _serve_invariants(payload: dict, origin: str, out) -> list:
                 bad.append(f"{where}: injected device faults produced no "
                            f"ladder activity (device_to_host=0, "
                            f"breaker_host_batches=0)")
+    bf = payload.get("budget_frontier")
+    if bf:
+        rows = sorted(bf.get("rows") or [], key=lambda r: r["budget_bytes"])
+        full = bf.get("full_label_bytes", 0)
+        prev_rate = None
+        for r in rows:
+            where = f"serve[{origin}/budget_frontier@{r.get('fraction')}]"
+            wrong = r.get("wrong_vs_full", 0) + r.get("sample_errors", 0)
+            if wrong:
+                bad.append(f"{where}: {wrong} wrong answers under the "
+                           f"budget — truncation is supposed to be unable "
+                           f"to change a verdict")
+            rate = r.get("uncertain_rate", 0.0)
+            if prev_rate is not None and rate > prev_rate + 1e-9:
+                bad.append(f"{where}: uncertain_rate {rate} EXCEEDS the "
+                           f"smaller budget's {prev_rate} — rate must be "
+                           f"monotone non-increasing in budget")
+            prev_rate = rate
+            if r.get("budget_bytes", 0) >= full and r.get("uncertain", 0):
+                bad.append(f"{where}: {r['uncertain']} uncertain verdicts "
+                           f"at the FULL budget (nothing is truncated)")
+        for frac, row in (bf.get("open_loop_faulted") or {}).items():
+            where = f"serve[{origin}/budget_frontier.faulted@{frac}]"
+            if row.get("sample_errors", 0):
+                bad.append(f"{where}: {row['sample_errors']} wrong answers")
+            if not row.get("answered", 0):
+                bad.append(f"{where}: answered no queries at all")
+            if not row.get("p99_within_deadline", True):
+                bad.append(f"{where}: p99 {row.get('p99_ms')}ms blew the "
+                           f"deadline under the budget")
+            budget = row.get("budget") or {}
+            if not budget.get("truncated", False):
+                bad.append(f"{where}: the budgeted run served an "
+                           f"untruncated store — the budget did not bite")
     return bad
 
 

@@ -12,6 +12,14 @@ the robustness record: it must show sheds (backpressure engaged), breaker
 and ladder activity, p99 of admitted queries inside the deadline, and zero
 wrong answers — those invariants are what ``--check-monotone`` gates.
 
+Phase 3 (budget_frontier section) sweeps the memory-budgeted tier: at
+25/50/75/100% of the full label bytes it records the index-bytes vs
+latency vs uncertain-rate frontier on a deterministic closed-loop query set
+(every budget point compared against the full-store verdicts AND a BFS
+truth sample), then re-runs the device-faulted open-loop workload under
+each non-full budget.  The gates: zero wrong answers at EVERY budget
+point, and the uncertain rate monotone non-increasing in budget.
+
   PYTHONPATH=src python -m benchmarks.serve_sweep
   PYTHONPATH=src python -m benchmarks.serve_sweep --scale 0.05 --n-queries 200000
   PYTHONPATH=src python -m benchmarks.serve_sweep --skip-sweep   # open-loop only
@@ -21,13 +29,17 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
+
+import numpy as np
 
 from repro.core.api import build_oracle
 from repro.ft import inject
 from repro.graph.generators import paper_dataset_analogue
 from repro.launch.serve import main as serve_main
+from repro.serve.budget import BudgetController, label_bytes, truncate_store
 from repro.serve.daemon import DaemonConfig
-from repro.serve.openloop import run_open_loop
+from repro.serve.openloop import check_truth, run_open_loop
 
 # the faulted row's fault plan: stalls long enough to overflow the bounded
 # queue at the offered rate (so sheds MUST appear), then a consecutive
@@ -36,8 +48,91 @@ STALL_OCCURRENCES = list(range(2, 11))
 STALL_SECONDS = 0.06
 FAIL_OCCURRENCES = [12, 13, 14]
 
+BUDGET_FRACTIONS = (0.25, 0.5, 0.75, 1.0)
 
-def open_loop_rows(args) -> dict:
+
+def _fault_plan() -> inject.Injector:
+    """A FRESH injector per run — occurrence counters live on the plan."""
+    return inject.Injector(
+        {"serve.device_dispatch": FAIL_OCCURRENCES},
+        latency={"serve.device_dispatch": (STALL_OCCURRENCES, STALL_SECONDS)})
+
+
+def budget_frontier(co, g, *, fractions=BUDGET_FRACTIONS,
+                    n_queries: int = 20_000, batch: int = 2048,
+                    seed: int = 0, open_loop_base: dict = None,
+                    open_loop_config: DaemonConfig = None,
+                    out=print) -> dict:
+    """Index bytes vs latency vs uncertain-rate frontier for the budgeted
+    serving tier (README "Memory budgets").
+
+    Closed-loop rows are deterministic (fixed seed, host backend) so the
+    monotone-uncertain gate compares like with like; the per-fraction
+    ``open_loop_faulted`` rows re-run the device-faulted Poisson workload
+    under each non-full budget — the acceptance record that a daemon under
+    ``--budget-mb`` returns zero wrong answers while degraded."""
+    engine = co.engine
+    full = label_bytes(co.oracle)
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, g.n, size=(n_queries, 2)).astype(np.int32)
+    engine.set_budget(None)
+    want = engine.query_batch(q, backend="host")   # full-store verdicts
+    rows = []
+    for frac in sorted(fractions):
+        budget = int(full * frac)
+        st = truncate_store(co.oracle, budget_bytes=budget)
+        engine.set_budget(st)
+        engine.reset_stats()
+        lat_ms = []
+        got = np.empty(n_queries, dtype=bool)
+        for lo in range(0, n_queries, batch):
+            t0 = time.perf_counter()
+            got[lo:lo + batch] = engine.query_batch(q[lo:lo + batch],
+                                                    backend="host")
+            lat_ms.append((time.perf_counter() - t0) * 1e3)
+        deg = engine.last_stats["degraded"]
+        row = {
+            "fraction": frac,
+            "budget_bytes": budget,
+            "resident_bytes": st.resident_bytes,
+            "rank_cut": st.rank_cut,
+            "n_truncated_rows": int(st.truncated_out.sum()
+                                    + st.truncated_in.sum()),
+            "n_queries": n_queries,
+            "uncertain": int(deg["uncertain"]),
+            "uncertain_rate": round(deg["uncertain"] / n_queries, 6),
+            "wrong_vs_full": int((got != want).sum()),
+            "sample_errors": check_truth(g, q, got, limit=300),
+            "batch_p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "batch_p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        }
+        rows.append(row)
+        out(f"  budget {frac:>5.0%}: resident {st.resident_bytes}B "
+            f"theta={st.rank_cut} uncertain_rate={row['uncertain_rate']} "
+            f"wrong={row['wrong_vs_full'] + row['sample_errors']} "
+            f"p99/batch {row['batch_p99_ms']}ms")
+    engine.set_budget(None)
+
+    faulted = {}
+    if open_loop_base is not None:
+        for frac in sorted(fractions):
+            if frac >= 1.0:
+                continue
+            out(f"  open-loop faulted run under {frac:.0%} budget")
+            ctl = BudgetController(engine, budget_bytes=int(full * frac))
+            row = run_open_loop(co, g, **open_loop_base,
+                                config=open_loop_config,
+                                fault_plan=_fault_plan(), budget_ctl=ctl)
+            engine.set_budget(None)
+            faulted[f"{frac}"] = row
+            out(f"    {row['sustained_qps']} qps, p99 {row['p99_ms']}ms, "
+                f"uncertain {row['degradation'].get('uncertain', 0)}, "
+                f"errors {row['sample_errors']}")
+    return {"full_label_bytes": full, "rows": rows,
+            "open_loop_faulted": faulted}
+
+
+def open_loop_rows(args) -> tuple:
     g = paper_dataset_analogue(args.dataset, scale=args.scale)
     co = build_oracle(g)
     base = dict(rate_arrivals_per_s=args.rate, arrival_batch=args.arrival_batch,
@@ -48,16 +143,26 @@ def open_loop_rows(args) -> dict:
     print(f"  sustained {clean['sustained_qps']} qps, shed_rate "
           f"{clean['shed_rate']}, p99 {clean['p99_ms']}ms")
     print("open-loop: device-faulted run (stalls + failures, bounded queue)")
-    plan = inject.Injector(
-        {"serve.device_dispatch": FAIL_OCCURRENCES},
-        latency={"serve.device_dispatch": (STALL_OCCURRENCES, STALL_SECONDS)})
     cfg = DaemonConfig(deadline_ms=args.deadline_ms,
                        queue_limit=args.faulted_queue_limit)
-    faulted = run_open_loop(co, g, **base, config=cfg, fault_plan=plan)
+    faulted = run_open_loop(co, g, **base, config=cfg,
+                            fault_plan=_fault_plan())
     print(f"  sustained {faulted['sustained_qps']} qps, shed_rate "
           f"{faulted['shed_rate']}, p99 {faulted['p99_ms']}ms, breaker trips "
           f"{faulted['breaker']['trips']}, degradation {faulted['degradation']}")
-    return {"clean": clean, "device_faulted": faulted}
+    rows = {"clean": clean, "device_faulted": faulted}
+    if args.skip_budget:
+        return rows, None
+    print("budget frontier: closed-loop sweep + faulted runs per budget")
+    # budgeted rows get deadline headroom: the uncertain->search rung is a
+    # recorded latency cost, not a shedding failure (see ci_smoke note)
+    bbase = dict(base, deadline_ms=args.budget_deadline_ms)
+    bcfg = DaemonConfig(deadline_ms=args.budget_deadline_ms,
+                        queue_limit=args.faulted_queue_limit)
+    frontier = budget_frontier(co, g, n_queries=args.budget_queries,
+                               seed=args.seed, open_loop_base=bbase,
+                               open_loop_config=bcfg)
+    return rows, frontier
 
 
 def ci_smoke(json_out: str = "BENCH_serve_ci.json", out=print) -> dict:
@@ -89,9 +194,21 @@ def ci_smoke(json_out: str = "BENCH_serve_ci.json", out=print) -> dict:
         f"shed={faulted['shed_rate']} p99={faulted['p99_ms']}ms "
         f"trips={faulted['breaker']['trips']} "
         f"degradation={faulted['degradation']}")
+    out("serve smoke: budget frontier (closed loop) + 50%-budget faulted run")
+    # the budgeted rows run with deadline headroom: the uncertain rung buys
+    # memory with real service time (exact search), and the frontier records
+    # that price — the gate is zero wrong answers + monotone uncertainty,
+    # not that truncation is latency-free
+    bbase = dict(base, deadline_ms=300.0, duration_s=1.0)
+    frontier = budget_frontier(
+        co, g, fractions=(0.5, 1.0), n_queries=4000, batch=512,
+        open_loop_base=bbase,
+        open_loop_config=DaemonConfig(deadline_ms=300.0, queue_limit=256),
+        out=out)
     payload = {
         "dataset": "random_dag_smoke", "n": g.n, "m": g.m, "mode": "ci_smoke",
         "open_loop": {"clean": clean, "device_faulted": faulted},
+        "budget_frontier": frontier,
     }
     with open(json_out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -121,6 +238,13 @@ def main() -> None:
     ap.add_argument("--faulted-queue-limit", type=int, default=768,
                     help="queue bound for the faulted row; small enough that "
                          "an injected stall overflows it at the offered rate")
+    ap.add_argument("--skip-budget", action="store_true",
+                    help="skip the budget_frontier section")
+    ap.add_argument("--budget-queries", type=int, default=20_000,
+                    help="closed-loop query count per budget point")
+    ap.add_argument("--budget-deadline-ms", type=float, default=300.0,
+                    help="deadline for the budgeted open-loop rows (the "
+                         "uncertain->search rung costs real service time)")
     args = ap.parse_args()
 
     if not args.skip_sweep:
@@ -135,20 +259,26 @@ def main() -> None:
         serve_main()
 
     if not args.skip_open_loop:
-        rows = open_loop_rows(args)
+        rows, frontier = open_loop_rows(args)
         try:
             with open(args.out) as f:
                 data = json.load(f)
         except (OSError, json.JSONDecodeError):
             data = {}
         data["open_loop"] = rows
+        if frontier is not None:
+            data["budget_frontier"] = frontier
         with open(args.out, "w") as f:
             json.dump(data, f, indent=2)
             f.write("\n")
         print(f"wrote open_loop rows -> {args.out}")
         bad = rows["clean"]["sample_errors"] + rows["device_faulted"]["sample_errors"]
+        for row in (frontier or {}).get("rows", []):
+            bad += row["wrong_vs_full"] + row["sample_errors"]
+        for row in ((frontier or {}).get("open_loop_faulted") or {}).values():
+            bad += row["sample_errors"]
         if bad:
-            raise SystemExit(f"open-loop rows recorded {bad} wrong answers")
+            raise SystemExit(f"serve rows recorded {bad} wrong answers")
 
 
 if __name__ == "__main__":

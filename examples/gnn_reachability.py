@@ -1,5 +1,6 @@
-"""Oracle x GNN integration (DESIGN.md §Arch-applicability): hop labels as
-reachability features for a GCN node classifier on a DAG.
+"""Oracle x GNN integration (see README "Serve architecture" for where the
+engine sits): hop labels as reachability features for a GCN node classifier
+on a DAG.
 
 The oracle is built once on the workload graph; each vertex's label lengths
 and top-hop ids become extra node features — the "reachability feature
@@ -13,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distribution_labeling
+from repro.core import build_oracle
 from repro.data.synth import graph_batch_from_csr
 from repro.graph.generators import layered_dag
 from repro.models.gnn import gcn
@@ -22,17 +23,23 @@ from repro.optim import adamw_init, adamw_update
 
 def main():
     g = layered_dag(600, 2.5, seed=0)
-    oracle = distribution_labeling(g)
-    print(f"graph n={g.n} m={g.m}; oracle {oracle.total_label_size} ints")
+    co = build_oracle(g)
+    stats = co.engine.stats()
+    print(f"graph n={g.n} m={g.m}; oracle {co.total_label_size} ints")
+    print(f"engine stats: epoch={stats['epoch']} backend={stats['backend']} "
+          f"tier widths={stats['widths']} "
+          f"quarantined rows={stats['n_quarantined']}")
+    oracle, comp = co.oracle, co.comp
 
     d_base = 16
     batch = graph_batch_from_csr(g, d_base, seed=0, n_classes=4)
-    # reachability feature channel: [out_len, in_len, min_out_hop_rank]
+    # reachability feature channel per ORIGINAL vertex (labels live in the
+    # condensation id space): [out_len, in_len, min_out_hop_rank]
     reach_feats = np.stack(
         [
-            oracle.out_len / max(oracle.out_len.max(), 1),
-            oracle.in_len / max(oracle.in_len.max(), 1),
-            oracle.L_out[:, 0] / g.n,
+            oracle.out_len[comp] / max(oracle.out_len.max(), 1),
+            oracle.in_len[comp] / max(oracle.in_len.max(), 1),
+            oracle.L_out[comp, 0] / g.n,
         ],
         axis=1,
     ).astype(np.float32)
@@ -41,7 +48,7 @@ def main():
     # labels correlated with reachability depth (so the channel helps)
     from repro.graph.reach import bfs_levels
 
-    lv = bfs_levels(g, int(np.argmax(oracle.out_len)))
+    lv = bfs_levels(g, int(np.argmax(oracle.out_len[comp])))
     y = np.clip(lv, 0, 3).astype(np.int32)
     batch = batch._replace(y=jnp.asarray(y))
 

@@ -15,6 +15,8 @@ seed-addressable injection points that the chaos test suite (and the
   ``dynamic.publish``       ``dynamic/versioned.py`` mid-publish, after the
                             staged compacting rebuild, before the commit point
   ``serve.device_dispatch``  ``serve/engine.py`` before a device batch
+  ``serve.retruncate``      ``serve/budget.py`` before the budget governor
+                            re-truncates the label store (a budget apply)
   ``persist.pre_rename``    ``persist/blocks.py`` after the tmp write, before
                             the atomic rename
   ========================  =====================================================

@@ -243,12 +243,93 @@ def scenario_daemon(seed: int) -> bool:
     return ok
 
 
+def scenario_budget(seed: int) -> bool:
+    """Drive a memory-pressure step-down mid-serve: the budget governor must
+    re-truncate the label store IN PLACE (no rebuild — the engine's full
+    oracle object survives untouched) while stalled batches are in flight,
+    drop no request, change no verdict, and step back up with hysteresis
+    once the pressure signal clears."""
+    import asyncio
+
+    from repro.serve.budget import BudgetController, PressureConfig, label_bytes
+    from repro.serve.daemon import DaemonConfig, ServeDaemon
+
+    g = random_dag(400, 1400, seed=seed)
+    co = build_oracle(g)
+    rng = np.random.default_rng(seed)
+    q_all = rng.integers(0, g.n, size=(2000, 2)).astype(np.int32)
+    want = co.engine.query_batch(q_all, backend="host")
+    co.engine.reset_stats()
+    full_oracle = co.engine.oracle   # identity-checked below: never rebuilt
+    full = label_bytes(co.oracle)
+
+    sig = {"bytes": 0.0}   # scripted pressure signal (deterministic)
+    ctl = BudgetController(
+        co.engine,
+        pressure=PressureConfig(watermark_bytes=full // 2, step_factor=0.5,
+                                recovery_ticks=2, check_interval_s=0.02),
+        pressure_source=lambda: sig["bytes"])
+    report: dict = {}
+
+    async def run() -> None:
+        daemon = ServeDaemon(
+            co, DaemonConfig(deadline_ms=2000.0, backend="dense",
+                             batch_window_ms=1.0), budget_ctl=ctl)
+        await daemon.start()
+        answers: dict = {}
+
+        async def ask(i: int) -> None:
+            answers[i] = await daemon.submit(q_all[i * 80:(i + 1) * 80])
+
+        # phase 1: clean serving at full labels
+        await asyncio.gather(*(ask(i) for i in range(10)))
+        # phase 2: pressure crosses the watermark while device dispatches
+        # are stalled — the step-down must land in the gaps BETWEEN stalled
+        # in-flight batches, never tear one
+        sig["bytes"] = float(full)
+        plan = inject.Injector(
+            latency={"serve.device_dispatch": (list(range(6)), 0.05)})
+        with inject.active(plan):
+            await asyncio.gather(*(ask(i) for i in range(10, 20)))
+        report["steps_down_mid_serve"] = daemon.counters["budget_steps_down"]
+        store = co.engine.budget_store
+        report["truncated"] = store is not None and store.any_truncated
+        # phase 3: budgeted serving continues under pressure
+        await asyncio.gather(*(ask(i) for i in range(20, 25)))
+        # phase 4: pressure clears; hysteresis must step all the way back up
+        sig["bytes"] = 0.0
+        for _ in range(300):
+            await asyncio.sleep(0.02)
+            if co.engine.budget_store is None:
+                break
+        report["stepped_back_up"] = co.engine.budget_store is None
+        stats = await daemon.drain()
+        report["answered"] = int(stats["answered"])
+        report["admitted"] = int(stats["admitted"])
+        report["shed"] = sum(v for k, v in stats.items() if k.startswith("shed_"))
+        got = np.concatenate([answers[i] for i in range(25)])
+        report["verdicts_match"] = bool((got == want).all())
+        report["no_rebuild"] = co.engine.oracle is full_oracle
+        report["retruncations"] = ctl.retruncations
+        report["uncertain_searched"] = co.engine.degradation["uncertain"]
+
+    asyncio.run(run())
+    ok = (report["steps_down_mid_serve"] > 0 and report["truncated"]
+          and report["stepped_back_up"] and report["verdicts_match"]
+          and report["no_rebuild"] and report["shed"] == 0
+          and report["answered"] == report["admitted"])
+    print(f"  {report}")
+    print(f"budget pressure step-down: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
 SCENARIOS = {
     "build": scenario_build,
     "corrupt": scenario_corrupt,
     "serve": scenario_serve,
     "dynamic": scenario_dynamic,
     "daemon": scenario_daemon,
+    "budget": scenario_budget,
 }
 
 

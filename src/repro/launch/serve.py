@@ -267,9 +267,41 @@ def _dump_obs(args) -> None:
         print(f"wrote metrics -> {args.metrics_out}")
 
 
+def budget_ctl_from_args(args, target):
+    """CLI budget flags -> a BudgetController (or None).
+
+    ``--budget-mb`` serves under a hard label-byte budget from the start;
+    ``--pressure-watermark`` (MiB of resident label bytes) arms the live
+    pressure loop — with no initial budget, the daemon serves the full
+    store until the signal crosses the watermark, then steps down."""
+    if args.budget_mb is None and args.pressure_watermark is None:
+        return None
+    from repro.serve.budget import BudgetController, PressureConfig
+
+    engine = getattr(target, "engine", target)
+    pressure = None
+    if args.pressure_watermark is not None:
+        pressure = PressureConfig(
+            watermark_bytes=int(args.pressure_watermark * (1 << 20)))
+    ctl = BudgetController(
+        engine,
+        budget_bytes=(None if args.budget_mb is None
+                      else int(args.budget_mb * (1 << 20))),
+        pressure=pressure,
+    )
+    snap = ctl.snapshot()
+    print(f"budget: {snap['budget_bytes'] or 'none'} bytes over a "
+          f"{snap['full_bytes']}-byte full store "
+          f"(resident {snap['resident_bytes']}, rank_cut={snap['rank_cut']}"
+          + (f", watermark {pressure.watermark_bytes}" if pressure else "")
+          + ")")
+    return ctl
+
+
 def run_daemon(args) -> None:
     g = make_graph(args)
     target = build_target(args, g)
+    budget_ctl = budget_ctl_from_args(args, target)
     cfg = DaemonConfig(
         batch_window_ms=args.batch_window_ms,
         max_batch=args.max_batch,
@@ -328,6 +360,7 @@ def run_daemon(args) -> None:
             config=cfg,
             fault_plan=fault_plan_from_args(args),
             seed=args.seed,
+            budget_ctl=budget_ctl,
         )
     finally:
         ServeDaemon.__init__ = orig_init
@@ -350,6 +383,11 @@ def run_daemon(args) -> None:
     print(f"daemon: breaker trips={report['breaker']['trips']} "
           f"degradation={report['degradation']}  "
           f"sample_errors={report['sample_errors']}")
+    if report.get("budget"):
+        b = report["budget"]
+        print(f"daemon: budget resident={b['resident_bytes']}/{b['full_bytes']} "
+              f"bytes rank_cut={b['rank_cut']} steps_down={b['steps_down']} "
+              f"steps_up={b['steps_up']} retruncations={b['retruncations']}")
     if args.json_out:
         payload = {"dataset": args.dataset, "scale": args.scale,
                    "n": g.n, "m": g.m, "mode": "daemon",
@@ -407,6 +445,17 @@ def main() -> None:
     ap.add_argument("--batch-window-ms", type=float, default=2.0)
     ap.add_argument("--breaker-failures", type=int, default=3)
     ap.add_argument("--breaker-slo-ms", type=float, default=None)
+    # memory budget
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="daemon mode: serve under this label-byte budget "
+                         "(MiB) via rank-prefix truncation; verdicts the cut "
+                         "labels cannot prove route to exact online search — "
+                         "wrong answers are impossible at any budget")
+    ap.add_argument("--pressure-watermark", type=float, default=None,
+                    help="daemon mode: arm the live memory-pressure loop — "
+                         "step the budget down (re-truncate in place) while "
+                         "resident label bytes exceed this watermark (MiB), "
+                         "step back up with hysteresis once pressure clears")
     # faults
     ap.add_argument("--inject-device-failure", default=None, metavar="OCCS",
                     help="fault the given device-dispatch occurrences "

@@ -29,8 +29,10 @@ from repro.persist.blocks import (
 )
 from repro.persist.oracle_io import (
     LoadReport,
+    load_budgeted,
     load_epoch,
     load_oracle,
+    save_budgeted,
     save_epoch,
     save_oracle,
 )
@@ -47,6 +49,8 @@ __all__ = [
     "load_oracle",
     "save_epoch",
     "load_epoch",
+    "save_budgeted",
+    "load_budgeted",
     "LoadReport",
     "WriteAheadLog",
     "WalRecord",

@@ -20,7 +20,10 @@ Per-row-block corruption semantics by block kind:
   * an epoch's ``comp`` -> fatal even non-strict (there is no safe
     fallback for the vertex -> condensation map),
   * an epoch's ``level`` -> the level prefilter is disabled (``None``),
-    queries fall through to the intersection paths.
+    queries fall through to the intersection paths,
+  * a budgeted store's ``trunc_mask_out`` / ``trunc_mask_in`` -> that whole
+    side is treated as truncated (all-True mask): truncation marks only
+    route misses to the exact-search rung, so over-marking is always safe.
 """
 from __future__ import annotations
 
@@ -136,6 +139,70 @@ def load_oracle(path: str, strict: bool = True):
             f"{path}: expected a ReachabilityOracle snapshot, found {meta.get('kind')!r}")
     oracle, report = _load_oracle_parts(arrays, meta, bad)
     return oracle if strict else (oracle, report)
+
+
+# ------------------------------------------------ budget-truncated stores
+
+def save_budgeted(path: str, store, row_block: int = ROW_BLOCK) -> str:
+    """Snapshot a ``serve.budget.TruncatedStore``: the truncated oracle's
+    row blocks plus its packed truncation masks as their own block kind
+    (``trunc_mask_out`` / ``trunc_mask_in``), so a budgeted serving tier
+    can restart straight into its cut without re-truncating — or without
+    ever holding the full store (edge hosts)."""
+    arrays, meta = _oracle_arrays(store.oracle, row_block)
+    packed_out, packed_in = store.packed_masks()
+    arrays["trunc_mask_out"] = packed_out
+    arrays["trunc_mask_in"] = packed_in
+    meta.update(
+        kind="BudgetedOracle",
+        rank_cut=int(store.rank_cut),
+        budget_bytes=int(store.budget_bytes),
+        resident_bytes=int(store.resident_bytes),
+        dropped_ints=int(store.dropped_ints),
+    )
+    return save_blocks(path, arrays, meta)
+
+
+def load_budgeted(path: str, strict: bool = True):
+    """Load + verify a budget-truncated store (see ``load_oracle`` for the
+    strictness contract).
+
+    Corruption semantics COMPOSE with the row-block semantics above: label
+    row blocks quarantine exactly as in ``load_oracle`` (the report's masks
+    feed ``QueryEngine.set_quarantine`` as usual), while a corrupt
+    truncation-MASK block conservatively marks every row of that side as
+    truncated.  Over-marking is safe by construction — truncation marks
+    only ever route more label misses to the exact-search rung, so a lost
+    mask costs latency, never a wrong verdict."""
+    from repro.serve.budget import TruncatedStore, unpack_mask
+
+    arrays, meta, bad = load_blocks(path, strict=strict)
+    if meta.get("kind") != "BudgetedOracle":
+        raise CorruptSnapshotError(
+            f"{path}: expected a BudgetedOracle snapshot, found {meta.get('kind')!r}")
+    oracle, report = _load_oracle_parts(arrays, meta, bad)
+    n = int(meta["n"])
+
+    def _mask(name: str) -> np.ndarray:
+        blk = arrays.get(name)
+        if blk is None:
+            warnings.warn(
+                f"{path}: {name} block corrupt; treating every row of that "
+                "side as truncated (conservative: misses route to search)",
+                stacklevel=2)
+            return np.ones(n, dtype=bool)
+        return unpack_mask(blk, n)
+
+    store = TruncatedStore(
+        oracle=oracle,
+        truncated_out=_mask("trunc_mask_out"),
+        truncated_in=_mask("trunc_mask_in"),
+        rank_cut=int(meta["rank_cut"]),
+        budget_bytes=int(meta["budget_bytes"]),
+        resident_bytes=int(meta.get("resident_bytes", 0)),
+        dropped_ints=int(meta.get("dropped_ints", 0)),
+    )
+    return store if strict else (store, report)
 
 
 # ------------------------------------------------------------- LabelEpoch

@@ -5,6 +5,13 @@ circuit-broken degradation) and its open-loop workload driver.
 Every query path in the repo routes through ``QueryEngine``; future serving
 work (caching, async, new shardings) lands here.
 """
+from repro.serve.budget import (
+    BudgetController,
+    PressureConfig,
+    TruncatedStore,
+    rank_cut_for_budget,
+    truncate_store,
+)
 from repro.serve.daemon import CircuitBreaker, DaemonConfig, ServeDaemon, ShedError
 from repro.serve.engine import (
     BACKENDS,
@@ -21,6 +28,11 @@ from repro.serve.prefilter import PrefilterResult, apply_prefilters, topo_levels
 
 __all__ = [
     "BACKENDS",
+    "BudgetController",
+    "PressureConfig",
+    "TruncatedStore",
+    "rank_cut_for_budget",
+    "truncate_store",
     "CircuitBreaker",
     "DaemonConfig",
     "ServeDaemon",

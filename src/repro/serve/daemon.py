@@ -165,6 +165,7 @@ _ZERO_COUNTERS = {
     "batches": 0, "device_batches": 0, "breaker_host_batches": 0,
     "pinned_epoch_batches": 0, "pinned_device_to_host": 0,
     "publishes": 0,
+    "budget_steps_down": 0, "budget_steps_up": 0,
 }
 
 # Registry-backed mirrors of the per-daemon counter dict: every counter key
@@ -190,6 +191,10 @@ _REQ_LATENCY = metrics.histogram(
     "daemon_request_latency_ms", "answered requests, arrival -> future resolve")
 _DISPATCH_MS = metrics.histogram(
     "daemon_dispatch_ms", "padded-batch dispatch wall time (worker thread)")
+_BUDGET_STEPS = metrics.counter(
+    "daemon_budget_steps_total",
+    "pressure-loop budget steps taken between dispatch ticks",
+    labelnames=("direction",))
 
 _COUNTER_METRICS = {
     "submitted": _REQUESTS.labels(event="submitted"),
@@ -206,6 +211,8 @@ _COUNTER_METRICS = {
     "pinned_epoch_batches": _BATCHES.labels(rung="pinned_epoch"),
     "pinned_device_to_host": _BATCHES.labels(rung="pinned_host"),
     "publishes": _PUBLISHES.labels(),
+    "budget_steps_down": _BUDGET_STEPS.labels(direction="down"),
+    "budget_steps_up": _BUDGET_STEPS.labels(direction="up"),
 }
 
 
@@ -225,10 +232,16 @@ class ServeDaemon:
     the batch loop awaits it before collecting the next tick.
     """
 
-    def __init__(self, target, config: Optional[DaemonConfig] = None):
+    def __init__(self, target, config: Optional[DaemonConfig] = None,
+                 budget_ctl=None):
         self.target = target
         self.engine = getattr(target, "engine", target)
         self.cfg = config or DaemonConfig()
+        # optional serve.budget.BudgetController: when it carries a
+        # PressureConfig, start() runs its tick between dispatch ticks —
+        # re-truncations happen under _engine_lock, in the gaps between
+        # batches, so a budget step can never drop an in-flight batch
+        self.budget_ctl = budget_ctl
         self._dynamic = hasattr(target, "snapshot") and hasattr(target, "publish")
         self.state = "starting"
         self.counters: Dict[str, int] = dict(_ZERO_COUNTERS)
@@ -249,6 +262,7 @@ class ServeDaemon:
         # must finish before the publish may swap label arrays under it
         self._engine_lock = threading.Lock()
         self._loop_task: Optional[asyncio.Task] = None
+        self._pressure_task: Optional[asyncio.Task] = None
 
     def _count(self, key: str, n: int = 1) -> None:
         """Bump the per-instance counter AND its registry mirror, so the
@@ -262,6 +276,8 @@ class ServeDaemon:
         if self._loop_task is not None:
             return
         self._loop_task = asyncio.ensure_future(self._run())
+        if self.budget_ctl is not None and self.budget_ctl.pressure is not None:
+            self._pressure_task = asyncio.ensure_future(self._pressure_loop())
         self.state = "ready"
 
     async def drain(self) -> dict:
@@ -278,6 +294,7 @@ class ServeDaemon:
         """Abrupt stop (the chaos suite's mid-serve crash): the batch loop
         is cancelled mid-dispatch, and both queued and in-flight requests
         get ``shed[killed]`` — nothing drains."""
+        await self._stop_pressure()
         if self._loop_task is not None:
             self._loop_task.cancel()
             try:
@@ -297,11 +314,50 @@ class ServeDaemon:
         self.state = "killed"
 
     async def _stop_loop(self) -> None:
+        await self._stop_pressure()
         if self._loop_task is None:
             return
         self._queue.put_nowait(None)   # sentinel unblocks the collector
         await self._loop_task
         self._loop_task = None
+
+    async def _stop_pressure(self) -> None:
+        if self._pressure_task is None:
+            return
+        self._pressure_task.cancel()
+        try:
+            await self._pressure_task
+        except asyncio.CancelledError:
+            pass
+        self._pressure_task = None
+
+    # ------------------------------------------------------- pressure loop
+
+    async def _pressure_loop(self) -> None:
+        """Poll the BudgetController between dispatch ticks.
+
+        The tick runs in a worker thread UNDER ``_engine_lock`` — the same
+        lock every engine-path dispatch holds — so a re-truncation always
+        lands in the gap between two batches: the in-flight batch keeps the
+        store view it captured at entry, the next batch sees the new one,
+        and no batch is ever dropped or torn by a budget step."""
+        interval = self.budget_ctl.pressure.check_interval_s
+        loop = asyncio.get_running_loop()
+        while True:
+            await asyncio.sleep(interval)
+            step = await loop.run_in_executor(None, self._pressure_tick)
+            if step == "step_down":
+                self._count("budget_steps_down")
+            elif step == "step_up":
+                self._count("budget_steps_up")
+
+    def _pressure_tick(self) -> Optional[str]:
+        with self._engine_lock:
+            # a publish may have refreshed the engine (dropping the cut that
+            # was made from the OLD labels) — re-assert the budget over the
+            # newly published store before judging pressure
+            self.budget_ctl.reapply()
+            return self.budget_ctl.tick()
 
     # ---------------------------------------------------------- admission
 
@@ -612,6 +668,8 @@ class ServeDaemon:
             "breaker": self.breaker.snapshot(now),
             "counters": dict(c),
             "latency": self._latency_pctiles(),
+            "budget": (None if self.budget_ctl is None
+                       else self.budget_ctl.snapshot()),
             "engine": self.engine.stats(),
             # the process-global registry: one surface over daemon, engine,
             # build, dynamic, and fault-injection metrics

@@ -165,6 +165,7 @@ _ZERO_DEGRADATION = {
     "deadline_to_host": 0, # batch past deadline -> skip device (retrace risk)
     "searched": 0,         # labels unusable -> exact bidirectional search
     "quarantined": 0,      # queries that touched quarantined label rows
+    "uncertain": 0,        # budget-truncated miss, BOTH rows cut -> search
 }
 
 # registry mirrors (process-global; the per-engine ``degradation`` dict stays
@@ -178,6 +179,10 @@ _M_DEGRADED = metrics.counter(
 _DEGRADED_KIND = {k: _M_DEGRADED.labels(kind=k) for k in _ZERO_DEGRADATION}
 _M_EPOCH = metrics.gauge(
     "engine_epoch", "label-snapshot epoch the engine currently serves")
+_M_UNCERTAIN = metrics.counter(
+    "engine_verdict_uncertain_total",
+    "budget-truncated label misses that could not be proven NO and routed "
+    "to the exact-search rung")
 
 
 class QueryEngine:
@@ -222,6 +227,21 @@ class QueryEngine:
     skips labels entirely and runs the exact online search.  Every rung
     returns correct verdicts; ``self.degradation`` counts how often each
     downgrade fired so operators see corruption as a metric, not an outage.
+
+    Memory budgets (three-valued verdicts)
+    --------------------------------------
+    ``set_budget`` installs a ``serve.budget.TruncatedStore`` — labels cut
+    to a rank-prefix under a byte budget — and the engine serves from the
+    truncated matrices.  Verdicts become three-valued: a HIT on surviving
+    prefixes is a proven YES (every surviving entry is real); a MISS is a
+    proven NO unless BOTH rows were truncated (a uniform rank threshold
+    means kept entries can never match dropped entries, so the lost
+    intersection lives entirely in dropped x dropped); the residue —
+    both-rows-cut miss that no exact structural filter (same vertex, topo
+    level) decides — is UNCERTAIN and routes to the exact-search rung.
+    Wrong answers are impossible at any budget.  A batch captures its
+    store view once at entry (the view tuple is swapped whole), so a
+    concurrent re-truncation can never tear masks from matrices mid-batch.
     """
 
     def __init__(
@@ -238,6 +258,7 @@ class QueryEngine:
         comp_source=None,
         epoch: int = 0,
         fallback_graph=None,
+        search_node_budget: Optional[int] = None,
     ):
         self.oracle = oracle
         self.mesh = mesh
@@ -270,6 +291,12 @@ class QueryEngine:
         # its publish worker thread while dispatches run in another)
         self.degradation = dict(_ZERO_DEGRADATION)
         self._stats_lock = threading.Lock()
+        # node cap for the search rung (None = unbounded; the search stays
+        # exact either way — exhaustion falls back to forward-only BFS)
+        self.search_node_budget = search_node_budget
+        # (store, device L_out, device L_in, tier widths) — swapped whole in
+        # set_budget so a batch's entry-time capture is internally consistent
+        self._budget_view: Optional[tuple] = None
 
     # ---------------------------------------------------------- publishing
 
@@ -301,6 +328,9 @@ class QueryEngine:
         # new labels supersede any previous load-time quarantine
         self.quarantine_out = None
         self.quarantine_in = None
+        # ...and any budget truncation (it was cut from the OLD labels); the
+        # daemon's BudgetController re-applies its budget on the next tick
+        self._budget_view = None
 
     # ------------------------------------------------------- observability
 
@@ -311,6 +341,7 @@ class QueryEngine:
         finished batch's counters and its ``last_stats`` record under the
         same lock, and a reader in another thread (the daemon's publish
         worker) sees either all of a batch or none of it."""
+        bv = self._budget_view
         with self._stats_lock:
             return {
                 "epoch": self.epoch,
@@ -319,6 +350,13 @@ class QueryEngine:
                 "n_quarantined": int(
                     (0 if self.quarantine_out is None else int(self.quarantine_out.sum()))
                     + (0 if self.quarantine_in is None else int(self.quarantine_in.sum()))),
+                "budget": None if bv is None else {
+                    "budget_bytes": bv[0].budget_bytes,
+                    "resident_bytes": bv[0].resident_bytes,
+                    "rank_cut": bv[0].rank_cut,
+                    "n_truncated_rows": int(bv[0].truncated_out.sum()
+                                            + bv[0].truncated_in.sum()),
+                },
                 "degradation": dict(self.degradation),
                 "last_batch": copy.deepcopy(self.last_stats),
             }
@@ -347,6 +385,31 @@ class QueryEngine:
         self.quarantine_out = _norm(quarantine_out)
         self.quarantine_in = _norm(quarantine_in)
 
+    @property
+    def budget_store(self):
+        """The active ``TruncatedStore`` (None = serving the full labels)."""
+        bv = self._budget_view
+        return None if bv is None else bv[0]
+
+    def set_budget(self, store) -> None:
+        """Install (or with None, remove) a budget-truncated label store.
+
+        The engine keeps serving ``self.oracle``'s graph — only the label
+        MATRICES read by the intersection backends switch to the truncated
+        store, together with its truncation masks and a tier-width plan fit
+        to the truncated length distribution.  All four swap as one tuple:
+        an in-flight batch that captured the previous view stays internally
+        consistent (see class docstring), which is what lets the daemon's
+        pressure loop re-truncate between dispatches without draining."""
+        if store is None:
+            self._budget_view = None
+            return
+        t = store.oracle
+        lo, li = t.device_labels()
+        widths = tier_widths(t.out_len, t.in_len, t.max_label_len,
+                             n_tiers=self.n_tiers)
+        self._budget_view = (store, lo, li, widths)
+
     def _fallback(self):
         """Resolve the fallback graph to a cached (g, g_rev) pair."""
         if self._fallback_csr is None:
@@ -368,7 +431,8 @@ class QueryEngine:
         g, g_rev = self._fallback()
         out = np.empty(rest.shape[0], dtype=bool)
         for i, (u, v) in enumerate(rest):
-            out[i] = bidirectional_query(g, g_rev, int(u), int(v))
+            out[i] = bidirectional_query(g, g_rev, int(u), int(v),
+                                         node_budget=self.search_node_budget)
         return out
 
     # ------------------------------------------------------------- queries
@@ -396,12 +460,28 @@ class QueryEngine:
             _DEGRADED_KIND["quarantined"].inc()
             _DEGRADED_KIND["searched"].inc()
             return bool(self._search_batch(np.asarray([[u, v]]))[0])
-        o = self.oracle
-        if o.out_len[u] == 0 or o.in_len[v] == 0:
-            return False
         if self.level is not None and self.level[u] >= self.level[v]:
             return False
-        return o.query(u, v)
+        bv = self._budget_view
+        o = self.oracle if bv is None else bv[0].oracle
+        if o.out_len[u] == 0 or o.in_len[v] == 0:
+            # an empty TRUNCATED row is only a proven miss when at most one
+            # side was cut — fall through to the uncertain check below
+            hit = False
+        else:
+            hit = o.query(u, v)
+        if hit:
+            return True          # hits on surviving prefixes are proven YES
+        if bv is not None and bv[0].truncated_out[u] and bv[0].truncated_in[v]:
+            # miss with BOTH rows cut: uncertain -> exact search rung
+            with self._stats_lock:
+                self.degradation["uncertain"] += 1
+                self.degradation["searched"] += 1
+            _DEGRADED_KIND["uncertain"].inc()
+            _DEGRADED_KIND["searched"].inc()
+            _M_UNCERTAIN.inc()
+            return bool(self._search_batch(np.asarray([[u, v]]))[0])
+        return False
 
     def query_batch(self, queries: np.ndarray, backend: Optional[str] = None,
                     deadline: Optional[float] = None) -> np.ndarray:
@@ -423,7 +503,12 @@ class QueryEngine:
         queries = self._map_ids(np.asarray(queries))
         queries = np.ascontiguousarray(np.asarray(queries, dtype=np.int32))
         backend = self.backend if backend is None else select_backend(backend, self.mesh)
-        o = self.oracle
+        # capture the budget view ONCE: everything this batch reads (matrices,
+        # masks, widths) comes from one immutable tuple, so a pressure-loop
+        # re-truncation landing mid-batch cannot mix old masks with new rows
+        bv = self._budget_view
+        store = None if bv is None else bv[0]
+        o = self.oracle if store is None else store.oracle
         out = np.zeros(queries.shape[0], dtype=bool)
         degraded = dict(_ZERO_DEGRADATION)
 
@@ -464,41 +549,59 @@ class QueryEngine:
             "backend": backend, "n": stats["n_queries"],
             "prefiltered": stats["n_prefiltered"]}) if ON.enabled else trace.NOOP_SPAN
         with sp:
-            if rest_idx.size == 0:
-                self._tally(stats, degraded)
-                return out
-            rest = queries[rest_idx]
+            if rest_idx.size:
+                rest = queries[rest_idx]
 
-            if backend == "host":
-                res = self._host_batch(rest)
-            elif deadline is not None and time.monotonic() > deadline:
-                # past budget before the device attempt: retrace risk is the
-                # one unbounded cost left — take the predictable path instead
-                degraded["deadline_to_host"] += int(rest.shape[0])
-                sp.event("degrade", kind="deadline_to_host", n=int(rest.shape[0]))
-                res = self._host_batch(rest)
-            else:
-                try:
-                    if backend in ("dense", "kernel"):
-                        res = self._device_batch(
-                            rest, use_kernel=backend == "kernel", stats=stats)
-                    else:
-                        res = self._sharded_batch(rest, backend)
-                except Exception as e:  # ladder: device failure -> host merge
-                    degraded["device_to_host"] += int(rest.shape[0])
-                    sp.event("degrade", kind="device_to_host",
-                             n=int(rest.shape[0]), error=type(e).__name__)
-                    warnings.warn(
-                        f"{backend!r} backend failed ({type(e).__name__}: {e}); "
-                        f"serving {rest.shape[0]} queries on the host merge path",
-                        stacklevel=2)
-                    res = self._host_batch(rest)
-            out[rest_idx] = res
+                if backend == "host":
+                    res = self._host_batch(rest, o)
+                elif deadline is not None and time.monotonic() > deadline:
+                    # past budget before the device attempt: retrace risk is
+                    # the one unbounded cost left — take the predictable path
+                    degraded["deadline_to_host"] += int(rest.shape[0])
+                    sp.event("degrade", kind="deadline_to_host", n=int(rest.shape[0]))
+                    res = self._host_batch(rest, o)
+                else:
+                    try:
+                        if backend in ("dense", "kernel"):
+                            res = self._device_batch(
+                                rest, use_kernel=backend == "kernel",
+                                stats=stats, view=bv)
+                        else:
+                            res = self._sharded_batch(rest, backend, view=bv)
+                    except Exception as e:  # ladder: device failure -> host merge
+                        degraded["device_to_host"] += int(rest.shape[0])
+                        sp.event("degrade", kind="device_to_host",
+                                 n=int(rest.shape[0]), error=type(e).__name__)
+                        warnings.warn(
+                            f"{backend!r} backend failed ({type(e).__name__}: {e}); "
+                            f"serving {rest.shape[0]} queries on the host merge path",
+                            stacklevel=2)
+                        res = self._host_batch(rest, o)
+                out[rest_idx] = res
+
+            # three-valued epilogue: under a budget, a False verdict from the
+            # labels (backend miss OR emptiness prefilter on a cut-to-empty
+            # row) is only proven when at most one row was truncated.  The
+            # same-vertex and topo-level prefilters are graph facts, exact at
+            # any budget, so they keep their verdicts.
+            if store is not None and store.any_truncated and label_idx.size:
+                lq = queries[label_idx]
+                unc = (store.truncated_out[lq[:, 0]]
+                       & store.truncated_in[lq[:, 1]] & ~out[label_idx])
+                unc &= lq[:, 0] != lq[:, 1]
+                if self.level is not None:
+                    unc &= self.level[lq[:, 0]] < self.level[lq[:, 1]]
+                unc_idx = label_idx[unc]
+                if unc_idx.size:
+                    degraded["uncertain"] += int(unc_idx.size)
+                    degraded["searched"] += int(unc_idx.size)
+                    sp.event("degrade", kind="uncertain", n=int(unc_idx.size))
+                    out[unc_idx] = self._search_batch(queries[unc_idx])
             self._tally(stats, degraded)
             return out
 
-    def _host_batch(self, rest: np.ndarray) -> np.ndarray:
-        o = self.oracle
+    def _host_batch(self, rest: np.ndarray, o=None) -> np.ndarray:
+        o = self.oracle if o is None else o
         return np.fromiter((o.query(int(u), int(v)) for u, v in rest), dtype=bool,
                            count=rest.shape[0])
 
@@ -513,24 +616,29 @@ class QueryEngine:
         for k, v in degraded.items():
             if v:
                 _DEGRADED_KIND[k].inc(v)
+        if degraded.get("uncertain"):
+            _M_UNCERTAIN.inc(degraded["uncertain"])
 
     # ------------------------------------------------------------ backends
 
     def _device_batch(self, rest: np.ndarray, use_kernel: bool,
-                      stats: Optional[dict] = None) -> np.ndarray:
+                      stats: Optional[dict] = None,
+                      view: Optional[tuple] = None) -> np.ndarray:
         # chaos hook: an injected device failure here exercises the ladder's
         # device -> host downgrade in query_batch
         inject.fire("serve.device_dispatch", backend="kernel" if use_kernel else "dense")
         if stats is None:
             stats = {"tiers": []}   # direct callers outside query_batch
-        o = self.oracle
+        if view is not None:
+            o, lo, li, widths = view[0].oracle, view[1], view[2], view[3]
+        else:
+            o, lo, li, widths = self.oracle, self._lo, self._li, self.widths
         if not self.bucketing:
             with trace.span("device_call", cat="device", annotate=True,
                             args={"rows": int(rest.shape[0])} if ON.enabled else None):
-                r = serve_step(self._lo, self._li, jnp.asarray(rest),
-                               use_kernel=use_kernel)
+                r = serve_step(lo, li, jnp.asarray(rest), use_kernel=use_kernel)
             return np.asarray(r)
-        plan = plan_batch(rest, o.out_len, o.in_len, self.widths, min_tile=self.min_tile)
+        plan = plan_batch(rest, o.out_len, o.in_len, widths, min_tile=self.min_tile)
         results = []
         for tier in plan.tiers:
             q = jnp.asarray(plan.padded_queries(rest, tier))
@@ -538,14 +646,16 @@ class QueryEngine:
                             args={"width": tier.width, "rows": tier.rows}
                             if ON.enabled else None):
                 results.append(
-                    _tier_intersect(self._lo, self._li, q, tier.width, use_kernel))
+                    _tier_intersect(lo, li, q, tier.width, use_kernel))
             stats["tiers"].append(
                 {"width": tier.width, "count": int(tier.idx.size), "rows": tier.rows}
             )
         return plan.scatter([np.asarray(r) for r in results])
 
-    def _sharded_batch(self, rest: np.ndarray, backend: str) -> np.ndarray:
+    def _sharded_batch(self, rest: np.ndarray, backend: str,
+                       view: Optional[tuple] = None) -> np.ndarray:
         inject.fire("serve.device_dispatch", backend=backend)
+        lo, li = (self._lo, self._li) if view is None else (view[1], view[2])
         fn = self._sharded_fns.get(backend)
         if fn is None:
             if backend == "sharded":
@@ -563,5 +673,5 @@ class QueryEngine:
         pad = (-B) % max(shards, 1)
         if pad:
             rest = np.concatenate([rest, np.zeros((pad, 2), dtype=rest.dtype)], axis=0)
-        res = np.asarray(fn(self._lo, self._li, jnp.asarray(rest)))
+        res = np.asarray(fn(lo, li, jnp.asarray(rest)))
         return res[:B]

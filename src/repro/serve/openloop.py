@@ -81,6 +81,7 @@ def run_open_loop(
     fault_plan: Optional[inject.Injector] = None,
     seed: int = 0,
     n_truth: int = 200,
+    budget_ctl=None,
 ) -> dict:
     """Drive ``target`` (CondensedOracle / DynamicOracle) through an
     open-loop Poisson run; returns the BENCH-row report dict.
@@ -88,7 +89,12 @@ def run_open_loop(
     ``fault_plan`` (an ``inject.Injector``, latency rules included) is
     active for the whole run, so device faults hit the daemon's real
     dispatch path — this is how the faulted BENCH row proves the ladder
-    holds p99 bounded while shedding instead of collapsing."""
+    holds p99 bounded while shedding instead of collapsing.
+
+    ``budget_ctl`` (a ``serve.budget.BudgetController``) serves the run
+    under a memory budget; when it carries a PressureConfig the daemon's
+    pressure loop runs live, and the report's ``budget`` section records
+    the governor's final state (steps taken, resident bytes)."""
     # deferred: repro.dynamic imports repro.build which imports repro.serve —
     # a module-level import here would close that cycle
     from repro.dynamic.workload import poisson_times
@@ -99,7 +105,7 @@ def run_open_loop(
     queries = [rng.integers(0, g.n, size=(arrival_batch, 2)).astype(np.int32)
                for _ in range(arrivals.shape[0])]
 
-    daemon = ServeDaemon(target, cfg)
+    daemon = ServeDaemon(target, cfg, budget_ctl=budget_ctl)
     # warm every rung of the daemon's padded-dispatch ladder before the
     # clock starts (outside any fault plan, so injected occurrences hit the
     # measured run): each distinct batch shape pays device compile —
@@ -183,6 +189,7 @@ def run_open_loop(
         "device_batches": int(c["device_batches"]),
         "breaker_host_batches": int(c["breaker_host_batches"]),
         "degradation": health["engine"]["degradation"],
+        "budget": health["budget"],
         "faults": (None if fault_plan is None else
                    {"failed": list(fault_plan.fired),
                     "stalled": list(fault_plan.stalled)}),

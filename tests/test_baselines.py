@@ -50,3 +50,77 @@ def test_index_sizes_reported():
     for cls in BASELINES:
         idx = cls(g)
         assert idx.index_size_ints >= 0
+
+
+# --------------------------------------------- bidirectional_query (direct)
+# The serve engine's exactness escape hatch: the quarantine rung (PR 7) and
+# the budget-truncation uncertain rung both bottom out here, so it gets
+# direct coverage, not just incidental exercise through chaos scenarios.
+
+from repro.core.baselines.online_search import bidirectional_query  # noqa: E402
+from repro.graph.csr import from_edges  # noqa: E402
+
+
+def _all_pairs_agree(g, node_budget=None):
+    g_rev = g.reverse()
+    tc = transitive_closure_bits(g)
+    for u in range(g.n):
+        for v in range(g.n):
+            want = u == v or reaches_bit(tc, u, v)
+            got = bidirectional_query(g, g_rev, u, v, node_budget=node_budget)
+            assert got == want, (u, v, node_budget)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bidirectional_matches_truth_all_pairs(seed):
+    _all_pairs_agree(random_dag(40, 100, seed=seed))
+
+
+@pytest.mark.parametrize("node_budget", [1, 3, 8, 10_000])
+def test_bidirectional_budget_exhausted_forward_only(node_budget):
+    # node_budget=1 exhausts the bidirectional phase after one expansion, so
+    # nearly every positive pair completes on the forward-only fallback; the
+    # verdicts must be identical at EVERY budget — bounding trades the
+    # meet-in-the-middle speedup, never correctness
+    _all_pairs_agree(random_dag(40, 100, seed=2), node_budget=node_budget)
+    _all_pairs_agree(layered_dag(40, 2.0, seed=3), node_budget=node_budget)
+
+
+def test_bidirectional_reversed_graph_correctness():
+    # a long chain forces the search to alternate frontiers: the backward
+    # frontier expands over g_rev, so a wrong reverse graph cannot pass
+    n = 30
+    chain = from_edges(n, np.arange(n - 1), np.arange(1, n))
+    g_rev = chain.reverse()
+    for i in range(n):
+        for j in range(n):
+            assert bidirectional_query(chain, g_rev, i, j) == (i <= j), (i, j)
+    # reverse of the reverse serves the reversed reachability relation
+    for i in range(n):
+        for j in range(n):
+            assert bidirectional_query(g_rev, chain, i, j) == (i >= j), (i, j)
+
+
+@pytest.mark.parametrize("node_budget", [None, 1])
+def test_bidirectional_self_reachability(node_budget):
+    g = random_dag(25, 40, seed=4)   # sparse: leaves some vertices isolated
+    g_rev = g.reverse()
+    for u in range(g.n):
+        assert bidirectional_query(g, g_rev, u, u, node_budget=node_budget)
+
+
+@pytest.mark.parametrize("node_budget", [None, 2])
+def test_bidirectional_disconnected_pairs(node_budget):
+    # two components with no cross edges: every cross pair is False, and the
+    # search must terminate on frontier exhaustion, not wander
+    half = 12
+    src = list(range(half - 1)) + [half + i for i in range(half - 1)]
+    dst = list(range(1, half)) + [half + i + 1 for i in range(half - 1)]
+    g = from_edges(2 * half, src, dst)
+    g_rev = g.reverse()
+    for u in range(half):
+        for v in range(half, 2 * half):
+            assert not bidirectional_query(g, g_rev, u, v,
+                                           node_budget=node_budget)
+            assert not bidirectional_query(g, g_rev, v, u,
+                                           node_budget=node_budget)

@@ -1,0 +1,350 @@
+"""Memory-budgeted serving tier: rank-prefix truncation soundness, budget
+monotonicity, the pressure governor's hysteresis, and persisted truncated
+stores.
+
+The load-bearing claim (see ``serve/budget.py``): with a uniform rank
+threshold, a kept entry can never equal a dropped entry, so the only
+verdicts the cut can change are label-misses where BOTH rows were cut —
+and those are routed to exact search, never answered from the labels.
+These tests check that claim directly against BFS truth at every budget,
+not just against the full-label path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_oracle
+from repro.graph.csr import INVALID
+from repro.graph.generators import layered_dag, random_dag
+from repro.graph.reach import reaches_bit, transitive_closure_bits
+from repro.serve.budget import (
+    BudgetController,
+    PressureConfig,
+    TruncatedStore,
+    label_bytes,
+    pack_mask,
+    rank_cut_for_budget,
+    truncate_store,
+    unpack_mask,
+)
+
+
+def _truth(g):
+    tc = transitive_closure_bits(g)
+    return lambda u, v: u == v or reaches_bit(tc, int(u), int(v))
+
+
+# ------------------------------------------------------------- pure cut
+
+
+def test_pack_unpack_mask_roundtrip(rng):
+    for n in (1, 7, 8, 9, 64, 301):
+        mask = rng.random(n) < 0.4
+        assert np.array_equal(unpack_mask(pack_mask(mask), n), mask)
+
+
+def test_full_budget_is_identity(rng):
+    g = random_dag(120, 420, seed=5)
+    co = build_oracle(g)
+    full = label_bytes(co.oracle)
+    st = truncate_store(co.oracle, budget_bytes=full)
+    assert st.rank_cut == co.oracle.n
+    assert not st.any_truncated
+    assert st.dropped_ints == 0
+    assert np.array_equal(st.oracle.out_len, co.oracle.out_len)
+    assert np.array_equal(st.oracle.in_len, co.oracle.in_len)
+
+
+def test_rank_cut_monotone_and_within_budget():
+    g = random_dag(150, 600, seed=6)
+    oracle = build_oracle(g).oracle
+    full = label_bytes(oracle)
+    prev_theta = None
+    for frac in (1.0, 0.9, 0.75, 0.5, 0.25, 0.1, 0.02):
+        budget = int(full * frac)
+        theta = rank_cut_for_budget(oracle, budget)
+        st = truncate_store(oracle, rank_cut=theta)
+        # the binary search met the budget unless even the empty store's
+        # padded floor (n * 2 * _PAD_MULT ints) exceeds it
+        assert st.resident_bytes <= budget or theta == 0
+        if prev_theta is not None:
+            assert theta <= prev_theta   # smaller budget -> smaller theta
+        prev_theta = theta
+
+
+def test_truncation_is_rank_prefix():
+    """Kept entries are exactly the rank-< theta prefix of each row — the
+    index a construction run stopped at rank theta would have produced."""
+    g = layered_dag(130, 2.2, seed=7)
+    oracle = build_oracle(g).oracle
+    theta = rank_cut_for_budget(oracle, label_bytes(oracle) // 2)
+    st = truncate_store(oracle, rank_cut=theta)
+    for mat, lens, tmat, tlens in (
+        (oracle.L_out, oracle.out_len, st.oracle.L_out, st.oracle.out_len),
+        (oracle.L_in, oracle.in_len, st.oracle.L_in, st.oracle.in_len),
+    ):
+        for v in range(oracle.n):
+            row = mat[v, : lens[v]]
+            want = row[row < theta]          # rows are rank-sorted
+            got = tmat[v, : tlens[v]]
+            assert np.array_equal(got, want), v
+            assert np.all(tmat[v, tlens[v]:] == INVALID), v
+    # mask flags exactly the rows that lost entries
+    assert np.array_equal(st.truncated_out, st.oracle.out_len < oracle.out_len)
+    assert np.array_equal(st.truncated_in, st.oracle.in_len < oracle.in_len)
+
+
+def test_kept_never_meets_dropped():
+    """The soundness core: a surviving hit is a real hit (kept entries are a
+    subset of the full rows), and a lost intersection implies BOTH rows were
+    truncated — the 'miss + both cut' residue is the ONLY uncertain case."""
+    g = random_dag(140, 560, seed=8)
+    oracle = build_oracle(g).oracle
+    st = truncate_store(oracle, budget_bytes=label_bytes(oracle) // 3)
+    assert st.any_truncated
+    n = oracle.n
+    for u in range(n):
+        for v in range(n):
+            full_out = set(oracle.L_out[u, : oracle.out_len[u]].tolist())
+            full_in = set(oracle.L_in[v, : oracle.in_len[v]].tolist())
+            cut_out = set(st.oracle.L_out[u, : st.oracle.out_len[u]].tolist())
+            cut_in = set(st.oracle.L_in[v, : st.oracle.in_len[v]].tolist())
+            if cut_out & cut_in:
+                assert full_out & full_in, (u, v)   # hit => proven YES
+            if (full_out & full_in) and not (cut_out & cut_in):
+                # lost intersection lives in dropped x dropped
+                assert st.truncated_out[u] and st.truncated_in[v], (u, v)
+
+
+# ------------------------------------------------- engine three-valued path
+
+
+@pytest.mark.parametrize("frac", [1.0, 0.75, 0.5, 0.25, 0.05])
+def test_engine_exact_at_every_budget(frac, rng):
+    g = random_dag(180, 720, seed=9)
+    co = build_oracle(g)
+    truth = _truth(g)
+    q = rng.integers(0, g.n, size=(1500, 2)).astype(np.int32)
+    want = np.array([truth(u, v) for u, v in q])
+    full = label_bytes(co.oracle)
+    st = truncate_store(co.oracle, budget_bytes=int(full * frac))
+    co.engine.set_budget(st)
+    co.engine.reset_stats()
+    got = co.engine.query_batch(q, backend="host")
+    assert np.array_equal(got, want)
+    deg = co.engine.last_stats["degraded"]
+    if frac == 1.0:
+        assert not st.any_truncated
+        assert deg["uncertain"] == 0
+    # single-query path agrees with the batch path
+    for u, v in q[:60]:
+        assert co.engine.query(int(u), int(v)) == truth(u, v)
+    co.engine.set_budget(None)
+
+
+def test_uncertain_rate_monotone_in_budget(rng):
+    """Smaller budget -> nested uncertain sets -> the uncertain count on a
+    FIXED query set is monotone non-increasing in budget (the BENCH_serve
+    gate, checked here deterministically)."""
+    g = random_dag(200, 800, seed=10)
+    co = build_oracle(g)
+    q = rng.integers(0, g.n, size=(2500, 2)).astype(np.int32)
+    full = label_bytes(co.oracle)
+    counts = []
+    for frac in (1.0, 0.75, 0.5, 0.25, 0.1):
+        co.engine.set_budget(
+            truncate_store(co.oracle, budget_bytes=int(full * frac)))
+        co.engine.reset_stats()
+        co.engine.query_batch(q, backend="host")
+        counts.append(co.engine.last_stats["degraded"]["uncertain"])
+    co.engine.set_budget(None)
+    assert counts[0] == 0
+    assert all(a <= b for a, b in zip(counts, counts[1:])), counts
+
+
+def test_stats_and_clear(rng):
+    g = random_dag(90, 300, seed=11)
+    co = build_oracle(g)
+    assert co.engine.stats()["budget"] is None
+    st = truncate_store(co.oracle, budget_bytes=label_bytes(co.oracle) // 2)
+    co.engine.set_budget(st)
+    b = co.engine.stats()["budget"]
+    assert b["resident_bytes"] == st.resident_bytes
+    assert b["rank_cut"] == st.rank_cut
+    assert b["n_truncated_rows"] == int(st.truncated_out.sum()
+                                        + st.truncated_in.sum())
+    co.engine.set_budget(None)
+    assert co.engine.stats()["budget"] is None
+    q = rng.integers(0, g.n, size=(200, 2)).astype(np.int32)
+    truth = _truth(g)
+    got = co.engine.query_batch(q, backend="host")
+    assert np.array_equal(got, np.array([truth(u, v) for u, v in q]))
+
+
+# ------------------------------------------------------------- controller
+
+
+def test_controller_hysteresis_walk():
+    g = random_dag(160, 640, seed=12)
+    co = build_oracle(g)
+    full = label_bytes(co.oracle)
+    sig = {"bytes": 0.0}
+    ctl = BudgetController(
+        co.engine,
+        pressure=PressureConfig(watermark_bytes=full // 2, step_factor=0.5,
+                                recovery_ticks=2),
+        pressure_source=lambda: sig["bytes"],
+    )
+    assert ctl.tick() is None                      # calm: nothing happens
+    sig["bytes"] = float(full)                     # pressure!
+    assert ctl.tick() == "step_down"
+    first = ctl.budget_bytes
+    assert first is not None and co.engine.budget_store is not None
+    assert ctl.tick() == "step_down"               # still hot: halve again
+    assert ctl.budget_bytes < first
+    assert ctl.snapshot()["step_depth"] == 2
+    sig["bytes"] = 0.0                             # pressure gone
+    assert ctl.tick() is None                      # calm tick 1 of 2
+    assert ctl.tick() == "step_up"                 # undo one step
+    assert ctl.budget_bytes == first
+    assert ctl.tick() is None
+    assert ctl.tick() == "step_up"                 # back to configured=None
+    assert ctl.budget_bytes is None
+    assert co.engine.budget_store is None          # full store restored
+    assert ctl.snapshot()["step_depth"] == 0
+    assert ctl.retruncations >= 3
+
+
+def test_controller_floor_and_configured_budget():
+    g = random_dag(100, 350, seed=13)
+    co = build_oracle(g)
+    full = label_bytes(co.oracle)
+    configured = full // 2
+    sig = {"bytes": float(full)}
+    ctl = BudgetController(
+        co.engine, budget_bytes=configured,
+        pressure=PressureConfig(watermark_bytes=full // 4, step_factor=0.5,
+                                recovery_ticks=1,
+                                min_budget_bytes=configured // 4),
+        pressure_source=lambda: sig["bytes"],
+    )
+    assert ctl.budget_bytes == configured          # operator budget applied
+    while ctl.tick() == "step_down":
+        pass
+    assert ctl.budget_bytes == configured // 4     # clamped at the floor
+    assert ctl.tick() is None                      # hot but floored: no flap
+    sig["bytes"] = 0.0
+    while ctl.snapshot()["step_depth"] > 0:
+        ctl.tick()
+    assert ctl.budget_bytes == configured          # recovers to CONFIGURED,
+    assert co.engine.budget_store is not None      # not to the full store
+
+
+def test_controller_reapply_after_refresh(rng):
+    g = random_dag(110, 380, seed=14)
+    co = build_oracle(g)
+    ctl = BudgetController(co.engine,
+                           budget_bytes=label_bytes(co.oracle) // 2)
+    assert co.engine.budget_store is not None
+    co.engine.refresh(co.oracle)                   # publish drops the view
+    assert co.engine.budget_store is None
+    ctl.reapply()                                  # daemon tick re-asserts
+    st = co.engine.budget_store
+    assert st is not None and st.any_truncated
+    truth = _truth(g)
+    q = rng.integers(0, g.n, size=(400, 2)).astype(np.int32)
+    got = co.engine.query_batch(q, backend="host")
+    assert np.array_equal(got, np.array([truth(u, v) for u, v in q]))
+
+
+def test_controller_retain_full_requires_snapshot():
+    g = random_dag(40, 100, seed=15)
+    co = build_oracle(g)
+    with pytest.raises(ValueError):
+        BudgetController(co.engine, retain_full=False)
+
+
+def test_controller_snapshot_path_reload(tmp_path):
+    """retain_full=False: stepping back up reloads the full store from the
+    persist snapshot instead of holding it in memory."""
+    from repro.persist import save_oracle
+
+    g = random_dag(100, 340, seed=16)
+    co = build_oracle(g)
+    path = str(tmp_path / "full")
+    save_oracle(path, co.oracle)
+    ctl = BudgetController(
+        co.engine, budget_bytes=label_bytes(co.oracle) // 2,
+        snapshot_path=path, retain_full=False,
+    )
+    assert ctl._full is None or ctl.budget_bytes is not None
+    st = co.engine.budget_store
+    assert st is not None and st.any_truncated
+    ctl.apply(None)                                # step up => snapshot load
+    assert co.engine.budget_store is None
+    assert label_bytes(co.engine.oracle) == label_bytes(ctl.full_oracle())
+
+
+# --------------------------------------------------------------- persist
+
+
+def test_persist_budgeted_roundtrip(tmp_path):
+    from repro.persist import load_budgeted, save_budgeted
+
+    g = random_dag(130, 480, seed=17)
+    oracle = build_oracle(g).oracle
+    st = truncate_store(oracle, budget_bytes=label_bytes(oracle) // 2)
+    path = str(tmp_path / "budgeted")
+    save_budgeted(path, st)
+    back = load_budgeted(path, strict=True)
+    assert isinstance(back, TruncatedStore)
+    assert back.rank_cut == st.rank_cut
+    assert back.budget_bytes == st.budget_bytes
+    assert back.resident_bytes == st.resident_bytes
+    assert back.dropped_ints == st.dropped_ints
+    assert np.array_equal(back.truncated_out, st.truncated_out)
+    assert np.array_equal(back.truncated_in, st.truncated_in)
+    assert np.array_equal(back.oracle.L_out, st.oracle.L_out)
+    assert np.array_equal(back.oracle.L_in, st.oracle.L_in)
+
+
+def test_persist_budgeted_wrong_kind(tmp_path):
+    from repro.persist import CorruptSnapshotError, load_budgeted, save_oracle
+
+    g = random_dag(60, 160, seed=18)
+    oracle = build_oracle(g).oracle
+    path = str(tmp_path / "plain")
+    save_oracle(path, oracle)
+    with pytest.raises(CorruptSnapshotError):
+        load_budgeted(path, strict=True)
+
+
+def test_persist_corrupt_mask_degrades_conservatively(tmp_path):
+    """A corrupt truncation mask must never UNDER-mark: the non-strict load
+    falls back to all-True (every row treated as truncated), which only
+    routes more misses to exact search — it cannot create a wrong NO."""
+    import glob
+
+    from repro.ft.inject import flip_bit
+    from repro.persist import (CorruptSnapshotError, load_budgeted,
+                               save_budgeted)
+
+    g = random_dag(120, 420, seed=19)
+    co = build_oracle(g)
+    st = truncate_store(co.oracle, budget_bytes=label_bytes(co.oracle) // 2)
+    path = str(tmp_path / "budgeted")
+    save_budgeted(path, st)
+    (mask_file,) = glob.glob(str(tmp_path / "budgeted" / "trunc_mask_out*"))
+    flip_bit(mask_file, seed=3)
+    with pytest.raises(CorruptSnapshotError):
+        load_budgeted(path, strict=True)
+    back, report = load_budgeted(path, strict=False)
+    assert any("trunc_mask_out" in b for b in report.bad_blocks)
+    assert back.truncated_out.all()                # conservative fallback
+    assert np.array_equal(back.truncated_in, st.truncated_in)
+    # serving from the degraded store is still exact
+    truth = _truth(g)
+    co.engine.set_budget(back)
+    q = np.random.default_rng(20).integers(0, g.n, size=(600, 2)).astype(np.int32)
+    got = co.engine.query_batch(q, backend="host")
+    assert np.array_equal(got, np.array([truth(u, v) for u, v in q]))
+    co.engine.set_budget(None)

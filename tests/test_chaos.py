@@ -251,6 +251,54 @@ def test_combined_degradation_paths_in_one_batch(rng):
         assert deg["device_to_host"] > 0, name
 
 
+def test_quarantine_truncation_device_failure_one_batch(rng):
+    """Every degradation source at once: quarantined rows (PR 7 load
+    semantics), budget-TRUNCATED rows (rank-prefix cut at half the full
+    label bytes), and an injected device failure — all inside ONE
+    ``query_batch``, across the five graph families.  The ladder must
+    compose: verdicts agree with BFS ground truth, not merely with another
+    label path."""
+    from repro.graph.reach import reaches_bit, transitive_closure_bits
+    from repro.serve.budget import label_bytes, truncate_store
+
+    total = {"quarantined": 0, "uncertain": 0, "device_to_host": 0,
+             "searched": 0}
+    for name, g in _dag_families(rng):
+        co = build_oracle(g)
+        q = rng.integers(0, g.n, size=(700, 2)).astype(np.int32)
+        tc = transitive_closure_bits(g)
+        want = np.array([u == v or reaches_bit(tc, int(u), int(v))
+                         for u, v in q])
+        st = truncate_store(co.oracle,
+                            budget_bytes=label_bytes(co.oracle) // 2)
+        co.engine.set_budget(st)
+        qmask = np.zeros(co.oracle.n, dtype=bool)
+        qmask[rng.integers(0, co.oracle.n,
+                           size=max(co.oracle.n // 4, 1))] = True
+        co.engine.set_quarantine(qmask, None)
+        co.engine.reset_stats()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with inject.active(inject.Injector({"serve.device_dispatch": 0})):
+                got = co.engine.query_batch(q, backend="dense")
+        deg = co.engine.last_stats["degraded"]   # this one batch's counters
+        assert np.array_equal(got, want), name
+        assert deg["quarantined"] > 0, name
+        assert st.any_truncated, name
+        for k in total:
+            total[k] += deg[k]
+        # single-query path composes the same rungs
+        for u, v in q[:40]:
+            assert co.engine.query(int(u), int(v)) == (
+                u == v or reaches_bit(tc, int(u), int(v))), name
+    # each rung fired somewhere across the families (which rung serves a
+    # given query depends on the family's truncation/level geometry)
+    assert total["quarantined"] > 0
+    assert total["uncertain"] > 0
+    assert total["device_to_host"] > 0
+    assert total["searched"] >= total["quarantined"] + total["uncertain"]
+
+
 def test_quarantine_cleared_by_refresh(rng):
     g = random_dag(80, 240, seed=6)
     oracle = build_distribution_labels(g, impl="wave")
